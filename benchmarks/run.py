@@ -1,0 +1,19 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    from benchmarks import paper_tables
+
+    print("name,us_per_call,derived")
+    for bench in paper_tables.ALL:
+        for name, us, derived in bench():
+            print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

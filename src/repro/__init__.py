@@ -1,0 +1,19 @@
+"""repro: KaDisRedu-JAX — distributed reductions for Maximum Weight Independent Set.
+
+A JAX/TPU framework reproducing and extending
+"Distributed Reductions for the Maximum Weight Independent Set Problem"
+(Borowitz, Großmann, Schimek — CS.DC 2025).
+
+Layers
+------
+core/         the paper's contribution: distributed reduction model, rules,
+              DisReduS/DisReduA, reduce-and-greedy / reduce-and-peel solvers
+graphs/       instance generators (GNM / RGG / RHG) and neighbor sampling
+models/       assigned architectures (LM transformers, GNNs, DLRM)
+kernels/      Pallas TPU kernels with jnp oracles
+distributed/  sharding, checkpointing, fault tolerance, compression
+launch/       production mesh, multi-pod dry-run, train/serve drivers
+analysis/     HLO collective parsing + roofline
+"""
+
+__version__ = "1.0.0"

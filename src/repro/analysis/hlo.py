@@ -1,0 +1,80 @@
+"""HLO text analysis: collective-byte accounting for the roofline.
+
+``compiled.cost_analysis()`` reports FLOPs and memory bytes but not
+collective traffic — we parse the (post-SPMD, per-device) HLO text and sum
+operand bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op.
+
+Counting convention: bytes = size of the op's *output* operand (for
+all-gather that is the gathered result ≈ wire bytes received; for
+all-reduce the reduced tensor ≈ bytes sent+received/2; exact link-level
+accounting is topology-dependent — this uniform convention is applied to
+baseline and optimized variants alike, which is what the §Perf deltas
+need).  Ops inside while/fusion bodies are counted once per appearance
+(static trip counts are not recovered from HLO text) — noted in
+EXPERIMENTS.md where it matters.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|[\w\[\],{}\s]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.MULTILINE,
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes per collective kind over the HLO module text."""
+    out: Dict[str, int] = {}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        if kind.endswith("-done"):
+            continue
+        b = _shape_bytes(shape_str)
+        out[kind] = out.get(kind, 0) + b
+    return out
+
+
+def collective_ops(hlo_text: str) -> List[Tuple[str, int]]:
+    """(kind, bytes) per collective op, in program order."""
+    ops = []
+    for m in _OP_RE.finditer(hlo_text):
+        ops.append((m.group(2), _shape_bytes(m.group(1))))
+    return ops
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

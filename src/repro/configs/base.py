@@ -1,0 +1,423 @@
+"""Config/arch plumbing: every assigned architecture registers an ArchDef
+whose `build(shape, mesh, fsdp)` returns the jit-able step function, the
+abstract inputs (ShapeDtypeStructs — no allocation), and in_shardings for
+the multi-pod dry-run.  The same ArchDef supplies a reduced smoke config
+that actually runs one step on CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import common as MC
+from repro.train import optimizer as opt
+
+
+# --------------------------------------------------------------------- #
+# LM shape cells (seq_len × global_batch; decode shapes lower serve_step)
+# --------------------------------------------------------------------- #
+LM_SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+GNN_SHAPES: Dict[str, Dict[str, Any]] = {
+    "full_graph_sm": dict(kind="train", n_nodes=2708, n_edges=10556,
+                          d_feat=1433, n_graphs=1),
+    "minibatch_lg": dict(kind="train", n_nodes=169984, n_edges=168960,
+                         d_feat=602, n_graphs=1, sampled=True,
+                         batch_nodes=1024, fanout=(15, 10)),
+    "ogb_products": dict(kind="train", n_nodes=2449029, n_edges=61859140,
+                         d_feat=100, n_graphs=1),
+    "molecule": dict(kind="train", n_nodes=3840, n_edges=8192, d_feat=16,
+                     n_graphs=128),
+}
+
+RECSYS_SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_candidates=1_000_000),
+}
+
+# the paper's own workload as an 11th selectable arch (PE-flattened mesh)
+MWIS_SHAPES: Dict[str, Dict[str, Any]] = {
+    # weak-scaling cells (paper §7): per-PE vertices/edges as on HoreKa
+    "weak_1m": dict(kind="reduce", L=1 << 20, E=1 << 23, G=1 << 16,
+                    B=1 << 16, S=1 << 10, D=16, Dc=4),
+    "weak_4m": dict(kind="reduce", L=1 << 22, E=1 << 25, G=1 << 17,
+                    B=1 << 17, S=1 << 11, D=16, Dc=4),
+    "strong_128m": dict(kind="rnp", L=1 << 18, E=1 << 21, G=1 << 15,
+                        B=1 << 15, S=1 << 10, D=16, Dc=4),
+}
+
+
+@dataclasses.dataclass
+class BuildResult:
+    fn: Callable
+    abstract_inputs: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    # static metadata for the roofline
+    model_flops: float
+    note: str = ""
+    out_shardings: Any = None   # pinned outputs (train: loss/params/opt)
+
+
+@dataclasses.dataclass
+class ArchDef:
+    arch_id: str
+    family: str                      # lm | gnn | recsys | mwis
+    shapes: Tuple[str, ...]
+    build: Callable[[str, Any, Tuple[str, ...]], BuildResult]
+    smoke: Callable[[], None]        # runs a reduced config on CPU
+    skips: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+def fsdp_axes_for(mesh) -> Tuple[str, ...]:
+    names = mesh.axis_names
+    return tuple(a for a in names if a in ("pod", "data"))
+
+
+def sharding_tree(specs, mesh):
+    return MC.param_shardings(specs, mesh)
+
+
+def opt_abstract(params_abs):
+    """AdamW state (f32 moments) matching the abstract param tree."""
+    f32 = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params_abs
+    )
+    return opt.AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=f32,
+        nu=jax.tree.map(lambda s: s, f32),
+    )
+
+
+def opt_shardings(param_sh, mesh):
+    return opt.AdamWState(
+        step=NamedSharding(mesh, P()),
+        mu=param_sh,
+        nu=jax.tree.map(lambda s: s, param_sh),
+    )
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def ns(mesh, *spec, shape=None):
+    p = P(*spec)
+    if shape is not None:
+        p = MC.sanitize_pspec(tuple(shape), p, mesh)
+    return NamedSharding(mesh, p)
+
+
+def pad_multiple(x: int, m: int = 512) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# --------------------------------------------------------------------- #
+# family builders
+# --------------------------------------------------------------------- #
+def lm_build(cfg, shape_name: str, mesh, fsdp: Tuple[str, ...],
+             overrides: Optional[Dict[str, Any]] = None) -> BuildResult:
+    from repro.models import transformer as T
+
+    meta = LM_SHAPES[shape_name]
+    if overrides:
+        cfg = dataclasses.replace(
+            cfg, **{k: v for k, v in overrides.items() if hasattr(cfg, k)}
+        )
+    specs = T.param_specs(cfg, fsdp)
+    params_abs = MC.abstract_params(specs)
+    params_sh = sharding_tree(specs, mesh)
+    B, S = meta["batch"], meta["seq"]
+    f = tuple(fsdp)
+    ocfg = opt.AdamWConfig()
+
+    if meta["kind"] == "train":
+        batch_abs = dict(
+            tokens=sds((B, S), jnp.int32), labels=sds((B, S), jnp.int32)
+        )
+        batch_sh = dict(
+            tokens=ns(mesh, f, shape=(B, S)),
+            labels=ns(mesh, f, shape=(B, S)),
+        )
+        opt_abs = opt_abstract(params_abs)
+        opt_sh = opt_shardings(params_sh, mesh)
+
+        def train_step(params, ostate, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: T.loss_fn(p, batch, cfg)
+            )(params)
+            params, ostate = opt.adamw_update(grads, ostate, params, ocfg)
+            return loss, params, ostate
+
+        flops = 6.0 * cfg.n_active_params() * B * S
+        return BuildResult(
+            train_step, (params_abs, opt_abs, batch_abs),
+            (params_sh, opt_sh, batch_sh), flops,
+            out_shardings=(ns(mesh), params_sh, opt_sh),
+        )
+
+    if meta["kind"] == "prefill":
+        tokens_abs = sds((B, S), jnp.int32)
+
+        def prefill(params, tokens):
+            return T.prefill_step(params, tokens, cfg)
+
+        flops = 2.0 * cfg.n_active_params() * B * S
+        return BuildResult(
+            prefill, (params_abs, tokens_abs),
+            (params_sh, ns(mesh, f, shape=(B, S))), flops,
+        )
+
+    # decode: one new token against a seq-long KV cache
+    shard_seq = B == 1
+    (kc_abs, vc_abs), (kc_ps, vc_ps) = T.make_kv_cache_specs(
+        cfg, B, S, fsdp=f, shard_seq=shard_seq
+    )
+    tokens_abs = sds((B, 1), jnp.int32)
+    clen_abs = sds((), jnp.int32)
+
+    def decode(params, kc, vc, tokens, cache_len):
+        logits, (kc, vc) = T.serve_step(
+            params, (kc, vc), tokens, cache_len, cfg
+        )
+        return logits, kc, vc
+
+    flops = 2.0 * cfg.n_active_params() * B
+    return BuildResult(
+        decode,
+        (params_abs, kc_abs, vc_abs, tokens_abs, clen_abs),
+        (params_sh,
+         NamedSharding(mesh, MC.sanitize_pspec(kc_abs.shape, kc_ps, mesh)),
+         NamedSharding(mesh, MC.sanitize_pspec(vc_abs.shape, vc_ps, mesh)),
+         ns(mesh, f, shape=(B, 1)), ns(mesh)),
+        flops,
+        note="decode against %d-token cache" % S,
+    )
+
+
+def gnn_build(module, cfg, shape_name: str, mesh, fsdp,
+              overrides: Optional[Dict[str, Any]] = None,
+              *, molecular: bool, flops_fn) -> BuildResult:
+    meta = GNN_SHAPES[shape_name]
+    if overrides:
+        cfg = dataclasses.replace(
+            cfg, **{k: v for k, v in overrides.items() if hasattr(cfg, k)}
+        )
+    # data pipeline pads node/edge counts to shardable multiples
+    N = pad_multiple(meta["n_nodes"])
+    E2 = pad_multiple(2 * meta["n_edges"])
+    d_feat = meta["d_feat"]
+    cfg = dataclasses.replace(cfg, d_feat=d_feat)
+    specs = module.param_specs(cfg, fsdp)
+    params_abs = MC.abstract_params(specs)
+    params_sh = sharding_tree(specs, mesh)
+    f = tuple(fsdp)
+    ocfg = opt.AdamWConfig()
+
+    batch_abs = dict(
+        node_feat=sds((N, d_feat), jnp.float32),
+        row=sds((E2,), jnp.int32),
+        col=sds((E2,), jnp.int32),
+        labels=sds((N,), jnp.int32),
+        label_mask=sds((N,), jnp.float32),
+    )
+    ax_all = f + ("model",)
+    batch_sh = dict(
+        node_feat=ns(mesh, f, None),
+        row=ns(mesh, ax_all, shape=(E2,)),
+        col=ns(mesh, ax_all, shape=(E2,)),
+        labels=ns(mesh, f), label_mask=ns(mesh, f),
+    )
+    if molecular:
+        T_budget = min(8 * E2, 1 << 24)
+        batch_abs.update(
+            pos=sds((N, 3), jnp.float32),
+            batch_id=sds((N,), jnp.int32),
+            energy=sds((meta["n_graphs"],), jnp.float32),
+            triplets=sds((T_budget, 2), jnp.int32),
+            n_graphs=meta["n_graphs"],
+        )
+        batch_sh.update(
+            pos=ns(mesh, f, None), batch_id=ns(mesh, f),
+            energy=ns(mesh, None),
+            triplets=ns(mesh, ax_all, None, shape=(T_budget, 2)),
+            n_graphs=None,
+        )
+
+    opt_abs = opt_abstract(params_abs)
+    opt_sh = opt_shardings(params_sh, mesh)
+
+    def train_step(params, ostate, batch):
+        if molecular:
+            batch = dict(batch, n_graphs=meta["n_graphs"])
+        loss, grads = jax.value_and_grad(
+            lambda p: module.loss_fn(p, batch, cfg)
+        )(params)
+        params, ostate = opt.adamw_update(grads, ostate, params, ocfg)
+        return loss, params, ostate
+
+    if molecular:
+        batch_abs.pop("n_graphs")
+        batch_sh.pop("n_graphs")
+    return BuildResult(
+        train_step, (params_abs, opt_abs, batch_abs),
+        (params_sh, opt_sh, batch_sh),
+        flops_fn(cfg, N, E2),
+        out_shardings=(ns(mesh), params_sh, opt_sh),
+    )
+
+
+def dlrm_build(cfg, shape_name: str, mesh, fsdp,
+               overrides: Optional[Dict[str, Any]] = None) -> BuildResult:
+    from repro.models import dlrm as M
+
+    meta = RECSYS_SHAPES[shape_name]
+    specs = M.param_specs(cfg, fsdp)
+    params_abs = MC.abstract_params(specs)
+    params_sh = sharding_tree(specs, mesh)
+    f = tuple(fsdp)
+    B = meta["batch"]
+    ocfg = opt.AdamWConfig()
+
+    top_dims = (cfg.top_in,) + cfg.top_mlp
+    mlp_flops = sum(
+        a * b for a, b in zip(cfg.bot_mlp[:-1], cfg.bot_mlp[1:])
+    ) + sum(a * b for a, b in zip(top_dims[:-1], top_dims[1:]))
+    fwd = 2.0 * B * (
+        mlp_flops + (cfg.n_sparse + 1) ** 2 * cfg.embed_dim
+        + cfg.n_sparse * cfg.embed_dim
+    )
+
+    if meta["kind"] == "train":
+        batch_abs = dict(
+            dense=sds((B, cfg.n_dense), jnp.float32),
+            sparse=sds((B, cfg.n_sparse), jnp.int32),
+            labels=sds((B,), jnp.int32),
+        )
+        batch_sh = dict(
+            dense=ns(mesh, f, None), sparse=ns(mesh, f, None),
+            labels=ns(mesh, f),
+        )
+        opt_abs = opt_abstract(params_abs)
+        opt_sh = opt_shardings(params_sh, mesh)
+
+        def train_step(params, ostate, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: M.loss_fn(p, batch, cfg)
+            )(params)
+            params, ostate = opt.adamw_update(grads, ostate, params, ocfg)
+            return loss, params, ostate
+
+        return BuildResult(
+            train_step, (params_abs, opt_abs, batch_abs),
+            (params_sh, opt_sh, batch_sh), 3.0 * fwd,
+            out_shardings=(ns(mesh), params_sh, opt_sh),
+        )
+
+    if meta["kind"] == "serve":
+        batch_abs = dict(
+            dense=sds((B, cfg.n_dense), jnp.float32),
+            sparse=sds((B, cfg.n_sparse), jnp.int32),
+        )
+        batch_sh = dict(dense=ns(mesh, f, None), sparse=ns(mesh, f, None))
+
+        def serve(params, batch):
+            return M.serve_step(params, batch, cfg)
+
+        return BuildResult(
+            serve, (params_abs, batch_abs), (params_sh, batch_sh), fwd
+        )
+
+    # retrieval: 1 query × n_candidates batched dot
+    nc = meta["n_candidates"]
+    batch_abs = dict(
+        dense=sds((1, cfg.n_dense), jnp.float32),
+        candidates=sds((1, nc), jnp.int32),
+    )
+    batch_sh = dict(dense=ns(mesh), candidates=ns(mesh, None, f))
+
+    def retrieve(params, batch):
+        return M.retrieval_step(params, batch, cfg)
+
+    flops = 2.0 * nc * cfg.embed_dim
+    return BuildResult(
+        retrieve, (params_abs, batch_abs), (params_sh, batch_sh), flops
+    )
+
+
+def mwis_build(shape_name: str, mesh, fsdp,
+               overrides: Optional[Dict[str, Any]] = None) -> BuildResult:
+    """The paper's workload: DisRedu/RnP over a PE-flattened view of the
+    production mesh (pe = pod × data × model)."""
+    from repro.core.distributed import DisReduConfig
+    from repro.core.partition import PartitionedGraph
+    from repro.core import solvers as SOL
+
+    meta = MWIS_SHAPES[shape_name]
+    p = int(np.prod(mesh.devices.shape))
+    L, E, G, B, S, D, Dc = (meta[k] for k in ("L", "E", "G", "B", "S", "D", "Dc"))
+    V = L + G + 1
+
+    # abstract PartitionedGraph (shapes only — the dry-run contract)
+    pg = PartitionedGraph(
+        p=p, n_global=p * L, L=L, G=G, E=E, B=B, S=S, D=D,
+        starts=np.linspace(0, p * L, p + 1).astype(np.int64),
+        row=None, col=None, w0=None, gid=None, is_local=None, is_ghost=None,
+        is_iface=None, deg_local=None, owner_pe=None, iface_slots=None,
+        ghost_owner_slot=None, window=None, win_complete=None,
+        win_adj_bits=None, edge_common=None, Dc=Dc, send_slot=None,
+        recv_ghost=None,
+    )
+    algo = "reduce" if meta["kind"] == "reduce" else "rnp"
+    axis = tuple(mesh.axis_names)
+    ov = overrides or {}
+    cfg = DisReduConfig(
+        heavy_k=int(ov.get("heavy_k", 8)), mode="async", stale_sweeps=2,
+        exchange=ov.get("exchange", "allgather"), max_rounds=64,
+        fused_sweeps=bool(ov.get("fused_sweeps", False)),
+        use_heavy=bool(ov.get("use_heavy", True)),
+    )
+    if (overrides or {}).get("probe"):
+        # loop-free probe: exactly one rule sweep + one halo exchange —
+        # the roofline unit is "per sweep-round" (dynamic trip counts
+        # cannot be extrapolated statically)
+        run, keys = SOL.sweep_probe_shard_map_fn(pg, cfg, mesh, axis=axis)
+    else:
+        run, keys = SOL.solver_shard_map_fn(pg, cfg, mesh, algo, axis=axis)
+
+    shapes = dict(
+        row=((p, E), jnp.int32), col=((p, E), jnp.int32),
+        w0=((p, V), jnp.int32), gid=((p, V), jnp.int32),
+        is_local=((p, V), jnp.bool_), is_ghost=((p, V), jnp.bool_),
+        is_iface=((p, V), jnp.bool_), owner_pe=((p, V), jnp.int32),
+        iface_slots=((p, B), jnp.int32), ghost_owner_slot=((p, G), jnp.int32),
+        window=((p, V, D), jnp.int32), win_complete=((p, V), jnp.bool_),
+        win_adj_bits=((p, V, D), jnp.int32), edge_common=((p, E, Dc), jnp.int32),
+        send_slot=((p, p, S), jnp.int32), recv_ghost=((p, p, S), jnp.int32),
+    )
+    abstract = {k: sds(*shapes[k]) for k in keys}
+    shard = {k: ns(mesh, axis) for k in keys}
+
+    def step(arrays):
+        return run(arrays)
+
+    # "useful work": one pass of masked rule aggregates over all edges
+    flops = 10.0 * p * E
+    return BuildResult(
+        step, (abstract,), (shard,), flops,
+        note=f"algo={algo} p={p} (PE axis = flattened mesh)",
+    )

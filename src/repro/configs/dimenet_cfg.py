@@ -1,0 +1,44 @@
+"""dimenet — 6 blocks d_hidden=128 n_bilinear=8 spherical=7 radial=6.
+[arXiv:2003.03123; unverified]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from repro.configs import base
+from repro.models.gnn.dimenet import DimeNetConfig
+from repro.models.gnn import dimenet as module
+
+CONFIG = DimeNetConfig(
+    n_blocks=6, d_hidden=128, n_bilinear=8, n_spherical=7, n_radial=6,
+)
+
+SMOKE = dataclasses.replace(CONFIG, n_blocks=2, d_hidden=16, n_bilinear=4,
+                            n_spherical=3, n_radial=3)
+
+
+def _flops(cfg, n, e2):
+    t = 8 * e2  # capped triplet budget
+    per_edge = 2 * cfg.d_hidden**2 + 2 * cfg.d_hidden * cfg.n_radial
+    per_tri = 2 * cfg.d_hidden * cfg.n_bilinear
+    per_node = 4 * cfg.d_hidden**2
+    return 3.0 * cfg.n_blocks * (e2 * per_edge + t * per_tri + n * per_node)
+
+
+def smoke():
+    from repro.configs.smoke_runners import gnn_smoke
+
+    gnn_smoke(module, SMOKE, molecular=True)
+
+
+ARCH = base.ArchDef(
+    arch_id="dimenet",
+    family="gnn",
+    shapes=tuple(base.GNN_SHAPES),
+    build=functools.partial(
+        base.gnn_build, module, CONFIG, molecular=True, flops_fn=_flops
+    ),
+    smoke=smoke,
+)

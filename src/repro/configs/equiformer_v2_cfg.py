@@ -1,0 +1,43 @@
+"""equiformer-v2 — 12L d_hidden=128 l_max=6 m_max=2 8 heads, SO(2)-eSCN
+equivariant graph attention.  [arXiv:2306.12059; unverified]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from repro.configs import base
+from repro.models.gnn.equiformer_v2 import EquiformerV2Config
+from repro.models.gnn import equiformer_v2 as module
+
+CONFIG = EquiformerV2Config(
+    n_layers=12, d_hidden=128, l_max=6, m_max=2, n_heads=8,
+)
+
+SMOKE = dataclasses.replace(CONFIG, n_layers=2, d_hidden=16, l_max=2,
+                            m_max=1, n_heads=2, n_radial=4)
+
+
+def _flops(cfg, n, e2):
+    n_lm = cfg.lm_count
+    per_edge = 2 * n_lm * cfg.d_hidden**2 + 3 * n_lm * cfg.d_hidden
+    per_node = 2 * n_lm * cfg.d_hidden**2 + 2 * cfg.d_hidden**2
+    return 3.0 * cfg.n_layers * (e2 * per_edge + n * per_node)
+
+
+def smoke():
+    from repro.configs.smoke_runners import gnn_smoke
+
+    gnn_smoke(module, SMOKE, molecular=True)
+
+
+ARCH = base.ArchDef(
+    arch_id="equiformer-v2",
+    family="gnn",
+    shapes=tuple(base.GNN_SHAPES),
+    build=functools.partial(
+        base.gnn_build, module, CONFIG, molecular=True, flops_fn=_flops
+    ),
+    smoke=smoke,
+)

@@ -1,0 +1,43 @@
+"""gemma3-1b — 26L d_model=1152 4H (GQA kv=1, d_head=256) d_ff=6912,
+vocab=262144, 5:1 local:global interleave (sliding window 512), 128k ctx.
+[hf:google/gemma-3-1b-pt; unverified]
+
+The hybrid local:global attention makes this the one assigned LM arch that
+runs the `long_500k` cell (sub-quadratic in the local layers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from repro.configs import base
+from repro.models.transformer import TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="gemma3-1b",
+    n_layers=26, d_model=1152, n_heads=4, n_kv_heads=1, d_head=256,
+    d_ff=6912, vocab=262144, local_window=512, global_every=6,
+    rope_theta=1_000_000.0, attn_chunk=512,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=6, d_model=64, n_heads=4, n_kv_heads=1, d_head=16,
+    d_ff=128, vocab=128, local_window=8, global_every=3, attn_chunk=16,
+    loss_chunks=2,
+)
+
+
+def smoke():
+    from repro.configs.smoke_runners import lm_smoke
+
+    lm_smoke(SMOKE)
+
+
+ARCH = base.ArchDef(
+    arch_id="gemma3-1b",
+    family="lm",
+    shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+    build=functools.partial(base.lm_build, CONFIG),
+    smoke=smoke,
+)

@@ -1,0 +1,39 @@
+"""mistral-nemo-12b — 40L d_model=5120 32H (GQA kv=8, d_head=128)
+d_ff=14336, vocab=131072, dense, 128k ctx.
+[hf:mistralai/Mistral-Nemo-Base-2407; hf]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from repro.configs import base
+from repro.models.transformer import TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="mistral-nemo-12b",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, d_head=128,
+    d_ff=14336, vocab=131072, rope_theta=1_000_000.0, attn_chunk=512,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+    d_ff=128, vocab=128, attn_chunk=32, loss_chunks=2,
+)
+
+
+def smoke():
+    from repro.configs.smoke_runners import lm_smoke
+
+    lm_smoke(SMOKE)
+
+
+ARCH = base.ArchDef(
+    arch_id="mistral-nemo-12b",
+    family="lm",
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+    build=functools.partial(base.lm_build, CONFIG),
+    smoke=smoke,
+    skips={"long_500k": "pure full-attention arch (assignment rule)"},
+)

@@ -1,0 +1,31 @@
+"""mwis — the paper's own workload as a selectable architecture.
+
+Shapes follow the paper's weak-scaling setup (§7: N = 2^20 vertices and
+M = 2^22 edges per core, growing with p) plus a strong-scaling RnP cell.
+The PE axis is the flattened production mesh (pod × data × model).
+"""
+
+from __future__ import annotations
+
+import functools
+
+from repro.configs import base
+
+
+def smoke():
+    from repro.configs.smoke_runners import mwis_smoke
+
+    mwis_smoke()
+
+
+def _build(shape_name, mesh, fsdp, overrides=None):
+    return base.mwis_build(shape_name, mesh, fsdp, overrides)
+
+
+ARCH = base.ArchDef(
+    arch_id="mwis",
+    family="mwis",
+    shapes=tuple(base.MWIS_SHAPES),
+    build=_build,
+    smoke=smoke,
+)

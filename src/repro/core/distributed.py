@@ -1,0 +1,270 @@
+"""DisReduS / DisReduA — the paper's distributed reduction algorithms (§5).
+
+Round structure (Algorithm 5.1):
+
+  while global reduction progress:
+      LocalReduce(G_i)            — §5.1, vectorized rule sweeps to fixpoint
+      ExchWeightUpdates + ExchStatusUpdates — one fused halo exchange
+      (FilterMoves is a no-op here: the static-shape adaptation resolves the
+       move cases via degree-one folds and Lemma 4.4 tie-breaking; DESIGN.md §2)
+
+DisReduA (§5.4) is realised as *bounded staleness*: instead of waiting for
+the local fixpoint, each PE exchanges after `stale_sweeps` rule sweeps.
+That is the paper's asynchrony insight — don't serialize on quiescence;
+trade message freshness against idle time — mapped onto SPMD collectives,
+where XLA overlaps the independent interior sweeps with collective latency.
+
+Two execution paths share all rule/exchange code:
+
+  * union path   — all PEs stacked into one block-diagonal graph on one
+    device (exact SPMD simulation; tests/benches on CPU),
+  * shard_map path — PE axis = mesh devices, lax collectives (production,
+    and the lowering target of the multi-pod dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import exchange as X
+from repro.core import rules as R
+from repro.core.local_reduce import local_reduce
+from repro.core.partition import PartitionedGraph
+
+UNDECIDED, INCLUDED, EXCLUDED, FOLDED = 0, 1, 2, 3
+
+
+@dataclasses.dataclass(frozen=True)
+class DisReduConfig:
+    heavy_k: int = 8
+    use_heavy: bool = True
+    mode: str = "sync"            # "sync" = DisReduS | "async" = DisReduA
+    stale_sweeps: int = 2         # async: sweeps between exchanges
+    exchange: str = "allgather"   # "allgather" | "a2a"  (shard_map path)
+    fused_sweeps: bool = False    # §Perf H3: share aggregates per sweep
+    max_rounds: int = 10_000
+
+    @property
+    def sweeps_per_round(self) -> int:
+        return 1_000_000 if self.mode == "sync" else self.stale_sweeps
+
+
+class UnionProblem(NamedTuple):
+    w0: jax.Array
+    is_local: jax.Array
+    is_ghost: jax.Array
+    aux: R.Aux
+    halo: X.Halo
+    p: int
+    V: int  # per-PE vertex count (union total = p * V)
+
+
+def build_union_problem(pg: PartitionedGraph) -> UnionProblem:
+    """Stack all PEs into one block-diagonal graph with offset indices."""
+    p, V = pg.p, pg.V
+    off_v = (np.arange(p, dtype=np.int64) * V)[:, None]
+
+    def offset_idx(a: np.ndarray) -> np.ndarray:
+        # per-PE local indices -> union indices (nil_i = i*V + nil)
+        return (a.astype(np.int64) + off_v.reshape((p,) + (1,) * (a.ndim - 1))).astype(np.int32)
+
+    row = offset_idx(pg.row).reshape(-1)
+    col = offset_idx(pg.col).reshape(-1)
+    window = offset_idx(pg.window).reshape(p * V, -1)
+    edge_common = offset_idx(pg.edge_common).reshape(row.shape[0], -1)
+    aux = R.Aux(
+        row=jnp.asarray(row), col=jnp.asarray(col),
+        gid=jnp.asarray(pg.gid.reshape(-1)),
+        is_local=jnp.asarray(pg.is_local.reshape(-1)),
+        is_iface=jnp.asarray(pg.is_iface.reshape(-1)),
+        owner_rank=jnp.asarray(pg.owner_pe.reshape(-1)),
+        window=jnp.asarray(window),
+        win_complete=jnp.asarray(pg.win_complete.reshape(-1)),
+        win_adj_bits=jnp.asarray(pg.win_adj_bits.reshape(p * V, -1)),
+        edge_common=jnp.asarray(edge_common),
+    )
+    halo = X.make_halo(pg, pe=None)
+    return UnionProblem(
+        w0=jnp.asarray(pg.w0.reshape(-1)),
+        is_local=jnp.asarray(pg.is_local.reshape(-1)),
+        is_ghost=jnp.asarray(pg.is_ghost.reshape(-1)),
+        aux=aux, halo=halo, p=p, V=V,
+    )
+
+
+# --------------------------------------------------------------------- #
+# union path (single-device SPMD simulation)
+# --------------------------------------------------------------------- #
+def _round_union(state, prob: UnionProblem, cfg: DisReduConfig):
+    state = local_reduce(
+        state, prob.aux, heavy_k=cfg.heavy_k, use_heavy=cfg.use_heavy,
+        max_sweeps=cfg.sweeps_per_round, fused=cfg.fused_sweeps,
+    )
+    state, _ = X.exchange_union(state, prob.aux, prob.halo, p=prob.p)
+    return state
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("heavy_k", "use_heavy", "sweeps", "max_rounds", "p",
+                     "fused"),
+)
+def _disredu_union_jit(
+    w0, is_local, is_ghost, aux, halo, *, heavy_k, use_heavy, sweeps,
+    max_rounds, p, fused=False
+):
+    prob = UnionProblem(w0, is_local, is_ghost, aux, halo, p, 0)
+    cfg = DisReduConfig(
+        heavy_k=heavy_k, use_heavy=use_heavy,
+        mode="sync" if sweeps >= 1_000_000 else "async",
+        stale_sweeps=sweeps, max_rounds=max_rounds, fused_sweeps=fused,
+    )
+    state0 = R.init_state(w0, is_local, is_ghost)
+
+    def body(carry):
+        state, rounds, _ = carry
+        snap_s, snap_w = state.status, state.w
+        state = _round_union(state, prob, cfg)
+        changed = (state.status != snap_s).any() | (state.w != snap_w).any()
+        return state, rounds + 1, changed
+
+    def cond(carry):
+        _, rounds, changed = carry
+        return changed & (rounds < max_rounds)
+
+    state, rounds, _ = jax.lax.while_loop(
+        cond, body, (state0, jnp.zeros((), jnp.int32), jnp.ones((), bool))
+    )
+    return state, rounds
+
+
+def disredu(
+    pg: PartitionedGraph, cfg: DisReduConfig = DisReduConfig()
+) -> Tuple[R.RedState, UnionProblem, int]:
+    """Run DisReduS/DisReduA on the union simulation path."""
+    prob = build_union_problem(pg)
+    state, rounds = _disredu_union_jit(
+        prob.w0, prob.is_local, prob.is_ghost, prob.aux, prob.halo,
+        heavy_k=cfg.heavy_k, use_heavy=cfg.use_heavy,
+        sweeps=cfg.sweeps_per_round, max_rounds=cfg.max_rounds, p=prob.p,
+        fused=cfg.fused_sweeps,
+    )
+    return state, prob, int(rounds)
+
+
+# --------------------------------------------------------------------- #
+# shard_map path (production; also the dry-run lowering target)
+# --------------------------------------------------------------------- #
+def disredu_shard_map_fn(pg: PartitionedGraph, cfg: DisReduConfig, mesh,
+                         axis: str = "pe"):
+    """Return a jit-able function over stacked [p, ...] arrays running the
+    full DisRedu round loop under shard_map on `mesh` (axis name `axis`)."""
+    from jax.sharding import PartitionSpec as P
+
+    arrs = pg.device_arrays()
+    specs = {k: P(axis) for k in arrs}
+
+    def per_pe(row, col, w0, gid, is_local, is_ghost, is_iface, owner_pe,
+               iface_slots, ghost_owner_slot, window, win_complete,
+               win_adj_bits, edge_common, send_slot, recv_ghost):
+        sq = lambda a: a.reshape(a.shape[1:])
+        row, col = sq(row), sq(col)
+        aux = R.Aux(
+            row=row, col=col, gid=sq(gid), is_local=sq(is_local),
+            is_iface=sq(is_iface), owner_rank=sq(owner_pe),
+            window=sq(window), win_complete=sq(win_complete),
+            win_adj_bits=sq(win_adj_bits), edge_common=sq(edge_common),
+        )
+        L, G = pg.L, pg.G
+        halo = X.Halo(
+            iface_slots=sq(iface_slots),
+            ghost_vertex=L + jnp.arange(G, dtype=jnp.int32),
+            ghost_owner_pe=jnp.maximum(sq(owner_pe)[L : L + G], 0),
+            ghost_owner_slot=sq(ghost_owner_slot),
+            ghost_valid=sq(is_ghost)[L : L + G],
+            send_slot=sq(send_slot), recv_ghost=sq(recv_ghost),
+        )
+        state0 = R.init_state(sq(w0), sq(is_local), sq(is_ghost))
+
+        def body(carry):
+            state, rounds, _ = carry
+            snap_s, snap_w = state.status, state.w
+            state = local_reduce(
+                state, aux, heavy_k=cfg.heavy_k, use_heavy=cfg.use_heavy,
+                max_sweeps=cfg.sweeps_per_round, fused=cfg.fused_sweeps,
+            )
+            state, _ = X.exchange_shmap(
+                state, aux, halo, axis=axis, method=cfg.exchange
+            )
+            local_changed = (
+                (state.status != snap_s).any() | (state.w != snap_w).any()
+            )
+            changed = jax.lax.psum(local_changed.astype(jnp.int32), axis) > 0
+            return state, rounds + 1, changed
+
+        def cond(carry):
+            _, rounds, changed = carry
+            return changed & (rounds < cfg.max_rounds)
+
+        state, rounds, _ = jax.lax.while_loop(
+            cond, body,
+            (state0, jnp.zeros((), jnp.int32), jnp.ones((), bool)),
+        )
+        ex = lambda a: a.reshape((1,) + a.shape)
+        return ex(state.w), ex(state.status), ex(state.log_kind), \
+            ex(state.log_v), ex(state.log_u), ex(state.log_n), \
+            ex(state.offset), ex(rounds)
+
+    keys = list(arrs.keys())
+    in_specs = tuple(specs[k] for k in keys)
+    out_specs = (P(axis),) * 8
+    fn = jax.shard_map(
+        per_pe, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )
+
+    def run(arrays):
+        return fn(*(arrays[k] for k in keys))
+
+    return run, keys
+
+
+# --------------------------------------------------------------------- #
+# result extraction
+# --------------------------------------------------------------------- #
+def kernel_stats(
+    pg: PartitionedGraph, state: R.RedState
+) -> Tuple[int, int]:
+    """(#alive vertices, #alive undirected edges) of the reduced graph."""
+    status = np.asarray(state.status)
+    is_local = np.asarray(pg.is_local.reshape(-1))
+    alive_v = int(((status == UNDECIDED) & is_local).sum())
+    row = np.asarray(pg.row).astype(np.int64)
+    col = np.asarray(pg.col).astype(np.int64)
+    off = (np.arange(pg.p, dtype=np.int64) * pg.V)[:, None]
+    ur, uc = (row + off).reshape(-1), (col + off).reshape(-1)
+    ea = (status[ur] == UNDECIDED) & (status[uc] == UNDECIDED)
+    loc = np.asarray(pg.is_local.reshape(-1))
+    # count each undirected edge once: local rows only, and only (u < v) by gid
+    gids = np.asarray(pg.gid.reshape(-1))
+    cnt = int((ea & loc[ur] & (gids[ur] < gids[uc])).sum())
+    return alive_v, cnt
+
+
+def members_global(
+    pg: PartitionedGraph, state: R.RedState, aux: R.Aux
+) -> np.ndarray:
+    """Reconstruct and assemble the global member mask (union layout)."""
+    in_set = np.asarray(R.reconstruct_members(state, aux))
+    members = np.zeros(pg.n_global, dtype=bool)
+    is_local = np.asarray(pg.is_local.reshape(-1))
+    gids = np.asarray(pg.gid.reshape(-1))
+    sel = in_set & is_local
+    members[gids[sel]] = True
+    return members

@@ -1,0 +1,549 @@
+"""Vectorized masked reduction rules — the paper's §4.3 in JAX array form.
+
+Every rule is evaluated for *all* vertices of a PE's local subgraph at once
+(segment reductions over the edge list + static capped neighbor windows),
+instead of the per-vertex worklist of a sequential CPU reducer.  This is the
+TPU-native re-expression of the paper's observation that the rules "act very
+locally": locality means each test is a bounded neighborhood aggregate, i.e.
+exactly a masked segment op.
+
+Batching soundness.  A sequential reducer applies one rule at a time; a
+vectorized sweep fires many applications simultaneously, which is unsound
+without care (two adjacent vertices both passing an include test must not
+both be included; two vertices excluding each other via symmetric
+single-edge certificates would lose the optimum).  We restore soundness
+with deterministic priority filters (global vertex id = the paper's
+PE-rank/ID tie-breaking generalised to every rule):
+
+  * include rules   — candidates are accepted only if they beat every
+    candidate neighbor (accepted set is independent; include rules are
+    monotone under deletion of other accepted vertices, so a batch equals
+    some sequential order).
+  * exclude rules   — a vertex is excluded only if its certificate vertex
+    has *higher* priority; certificate chains therefore strictly ascend and
+    the standard rerouting argument (any solution using an excluded vertex
+    can be rerouted toward higher-priority certificates) terminates.
+  * weight transfer — accepted folds must be the unique candidate within
+    two hops, so their closed neighborhoods are disjoint and the batched
+    weight decrements cannot race.
+
+Ghost semantics follow the distributed reduction model (Def. 4.1):
+ghost weights are upper bounds (Lemma 4.2), neighborhoods are supersets
+(Lemma 4.3); every test below is monotone in the right direction so stale
+border data only ever makes a rule *more conservative*, never unsound.
+Interface-vertex includes are proposals (Remark 4.6); conflict resolution
+happens in the exchange step (:mod:`repro.core.distributed`).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.ops import segment_max, segment_sum
+
+UNDECIDED, INCLUDED, EXCLUDED, FOLDED = 0, 1, 2, 3
+LOG_FOLD1, LOG_WT = 1, 2
+
+I32_MIN = jnp.iinfo(jnp.int32).min
+
+
+class Aux(NamedTuple):
+    """Static (per-PE) graph structure; never modified by reductions."""
+
+    row: jax.Array            # [E] i32 source local idx (pad = nil)
+    col: jax.Array            # [E] i32 target local idx (pad = nil)
+    gid: jax.Array            # [V] i32 global id (nil/pad = -1)
+    is_local: jax.Array       # [V] bool
+    is_iface: jax.Array       # [V] bool
+    owner_rank: jax.Array     # [V] i32 owning PE (tie-breaking, Lemma 4.5)
+    window: jax.Array         # [V, D] i32 capped neighbor lists (pad = nil)
+    win_complete: jax.Array   # [V] bool
+    win_adj_bits: jax.Array   # [V, D] i32 static pairwise adjacency bits
+    edge_common: jax.Array    # [E, Dc] i32 capped common neighborhoods
+
+
+class RedState(NamedTuple):
+    """Mutable reduction state (one PE)."""
+
+    w: jax.Array        # [V] i32 current weights
+    status: jax.Array   # [V] i8
+    log_kind: jax.Array  # [LOG] i8   (fold log for reconstruction)
+    log_v: jax.Array    # [LOG] i32
+    log_u: jax.Array    # [LOG] i32
+    log_n: jax.Array    # [] i32
+    offset: jax.Array   # [] i32  (weight reclaimed by folds; reporting)
+    changed: jax.Array  # [] bool (any rule fired in the current sweep)
+
+
+def init_state(w0: jax.Array, is_local: jax.Array, is_ghost: jax.Array) -> RedState:
+    V = w0.shape[0]
+    L = int(is_local.shape[0])
+    status = jnp.where(is_local | is_ghost, UNDECIDED, EXCLUDED).astype(jnp.int8)
+    log_cap = V + 1  # each fold retires one vertex forever => never overflows
+    return RedState(
+        w=w0.astype(jnp.int32),
+        status=status,
+        log_kind=jnp.zeros(log_cap, jnp.int8),
+        log_v=jnp.zeros(log_cap, jnp.int32),
+        log_u=jnp.zeros(log_cap, jnp.int32),
+        log_n=jnp.zeros((), jnp.int32),
+        offset=jnp.zeros((), jnp.int32),
+        changed=jnp.zeros((), bool),
+    )
+
+
+# --------------------------------------------------------------------- #
+# shared masked aggregates
+# --------------------------------------------------------------------- #
+def _active(state: RedState) -> jax.Array:
+    return state.status == UNDECIDED
+
+
+def _edge_active(aux: Aux, active: jax.Array) -> jax.Array:
+    return active[aux.row] & active[aux.col]
+
+
+def _aw(state: RedState, active: jax.Array) -> jax.Array:
+    return jnp.where(active, state.w, 0)
+
+
+def _nbr_sum(aux: Aux, eact: jax.Array, vals: jax.Array, V: int) -> jax.Array:
+    contrib = jnp.where(eact, vals[aux.col], 0)
+    return segment_sum(contrib, aux.row, num_segments=V)
+
+
+def _nbr_max(aux: Aux, eact: jax.Array, vals: jax.Array, V: int) -> jax.Array:
+    contrib = jnp.where(eact, vals[aux.col], I32_MIN)
+    return jnp.maximum(segment_max(contrib, aux.row, num_segments=V), I32_MIN)
+
+
+def _act_deg(aux: Aux, eact: jax.Array, V: int) -> jax.Array:
+    return segment_sum(eact.astype(jnp.int32), aux.row, num_segments=V)
+
+
+def _accept_independent(
+    aux: Aux, eact: jax.Array, cand: jax.Array, V: int
+) -> jax.Array:
+    """Filter include candidates to an independent set (gid priority)."""
+    nbr_cand_gid = jnp.where(eact & cand[aux.col], aux.gid[aux.col], -1)
+    m = segment_max(nbr_cand_gid, aux.row, num_segments=V)
+    m = jnp.maximum(m, -1)
+    return cand & (aux.gid > m)
+
+
+def _apply_include(
+    state: RedState, aux: Aux, eact: jax.Array, accept: jax.Array
+) -> RedState:
+    status = jnp.where(accept, jnp.int8(INCLUDED), state.status)
+    hit = segment_max(
+        (accept[aux.row] & eact).astype(jnp.int32), aux.col,
+        num_segments=state.w.shape[0],
+    ) > 0
+    status = jnp.where(hit & (status == UNDECIDED), jnp.int8(EXCLUDED), status)
+    return state._replace(status=status, changed=state.changed | accept.any())
+
+
+def _log_append(
+    state: RedState, mask: jax.Array, kind: int, v_idx: jax.Array,
+    u_idx: jax.Array
+) -> RedState:
+    cap = state.log_kind.shape[0]
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    pos = jnp.where(mask, state.log_n + rank, cap - 1)
+    # cap-1 slot is a scratch sentinel; log_n never reaches it (see init_state)
+    log_kind = state.log_kind.at[pos].set(jnp.where(mask, jnp.int8(kind), 0))
+    log_v = state.log_v.at[pos].set(jnp.where(mask, v_idx, 0))
+    log_u = state.log_u.at[pos].set(jnp.where(mask, u_idx, 0))
+    n = state.log_n + mask.sum(dtype=jnp.int32)
+    return state._replace(log_kind=log_kind, log_v=log_v, log_u=log_u, log_n=n)
+
+
+class SweepCtx(NamedTuple):
+    """Aggregates snapshotted once per sweep (fused-sweep mode).
+
+    Soundness of staleness (EXPERIMENTS.md §Perf H3): adjacency is static
+    and weights/activity only decrease, so snapshot aggregates are upper
+    bounds of their fresh values — every rule test is monotone in the safe
+    direction.  Rule *applications* and certificate activity always use
+    fresh status (recomputed eact), so cross-family conflicts inside one
+    sweep cannot arise."""
+
+    S: jax.Array         # [V] neighborhood weight sums
+    deg: jax.Array       # [V] active degrees
+    M: jax.Array         # [V] max neighbor weight
+    only: jax.Array      # [V] the unique active neighbor (deg-1 vertices)
+    act_bits: jax.Array  # [V] window active bits
+    clique: jax.Array    # [V] active window forms a clique
+
+
+def compute_ctx(state: RedState, aux: Aux) -> SweepCtx:
+    V = state.w.shape[0]
+    active = _active(state)
+    eact = _edge_active(aux, active)
+    aw = _aw(state, active)
+    S = _nbr_sum(aux, eact, aw, V)
+    deg = _act_deg(aux, eact, V)
+    M = _nbr_max(aux, eact, state.w, V)
+    only = jnp.maximum(
+        segment_max(jnp.where(eact, aux.col, -1), aux.row, num_segments=V), 0
+    )
+    act_bits = _window_active_bits(state, aux)
+    clique = _is_clique(state, aux, act_bits)
+    return SweepCtx(S=S, deg=deg, M=M, only=only, act_bits=act_bits,
+                    clique=clique)
+
+
+# --------------------------------------------------------------------- #
+# rule: degree zero / one  (Meta rule + Remark 4.8, fold form of Gu et al.)
+# --------------------------------------------------------------------- #
+def rule_degree_one(state: RedState, aux: Aux, ctx: "SweepCtx" = None) -> RedState:
+    V = state.w.shape[0]
+    active = _active(state)
+    eact = _edge_active(aux, active)
+    if ctx is None:
+        deg = _act_deg(aux, eact, V)
+        only = segment_max(
+            jnp.where(eact, aux.col, -1), aux.row, num_segments=V
+        )
+        only = jnp.maximum(only, 0)
+    else:
+        deg, only = ctx.deg, ctx.only
+    w_u = state.w[only]
+
+    # (a) isolated vertices
+    acc0 = aux.is_local & active & (deg == 0)
+    state = _apply_include(state, aux, eact, acc0)
+
+    # (b) degree-one include: w(v) >= w_i(u)  — upper bound is enough
+    #     (ghost case: propose per Remark 4.6)
+    active = _active(state)
+    eact = _edge_active(aux, active)
+    cand = aux.is_local & active & (deg == 1) & (state.w >= w_u)
+    acc1 = _accept_independent(aux, eact, cand, V)
+    state = _apply_include(state, aux, eact, acc1)
+
+    # (c) degree-one fold: w(v) < w(u), u local:
+    #       w(u) -= w(v);  v FOLDED;  v ∈ I  iff  u ∉ I.
+    active = _active(state)
+    cand = aux.is_local & active & (deg == 1) & (state.w < w_u)
+    cand &= aux.is_local[only] & active[only]
+    # one fold per target u per sweep: keep the max-gid candidate
+    tgt = jnp.where(cand, only, V - 1)
+    best = jnp.full(V, -1, jnp.int32).at[tgt].max(jnp.where(cand, aux.gid, -1))
+    acc = cand & (aux.gid == best[only])
+    w = state.w.at[jnp.where(acc, only, V - 1)].add(
+        jnp.where(acc, -state.w, 0)
+    )
+    w = w.at[V - 1].set(0)
+    status = jnp.where(acc, jnp.int8(FOLDED), state.status)
+    offset = state.offset + jnp.where(acc, state.w, 0).sum(dtype=jnp.int32)
+    state = state._replace(
+        w=w, status=status, offset=offset, changed=state.changed | acc.any()
+    )
+    idx = jnp.arange(V, dtype=jnp.int32)
+    return _log_append(state, acc, LOG_FOLD1, idx, only.astype(jnp.int32))
+
+
+# --------------------------------------------------------------------- #
+# rule: Dist. Neighborhood Removal (Reduction 4.3)
+# --------------------------------------------------------------------- #
+def rule_neighborhood_removal(state: RedState, aux: Aux,
+                              ctx: "SweepCtx" = None) -> RedState:
+    V = state.w.shape[0]
+    active = _active(state)
+    eact = _edge_active(aux, active)
+    s = ctx.S if ctx is not None else _nbr_sum(
+        aux, eact, _aw(state, active), V
+    )
+    cand = aux.is_local & active & (state.w >= s)
+    acc = _accept_independent(aux, eact, cand, V)
+    return _apply_include(state, aux, eact, acc)
+
+
+# --------------------------------------------------------------------- #
+# clique machinery shared by simplicial rules (static adjacency bits)
+# --------------------------------------------------------------------- #
+def _window_active_bits(state: RedState, aux: Aux) -> jax.Array:
+    """[V] i32 — bit i set iff window[v, i] is an UNDECIDED vertex."""
+    D = aux.window.shape[1]
+    active = _active(state)
+    bits = jnp.zeros(state.w.shape[0], jnp.int32)
+    for i in range(D):
+        ent = aux.window[:, i]
+        bits |= (active[ent] & (aux.gid[ent] >= 0)).astype(jnp.int32) << i
+    return bits
+
+
+def _is_clique(state: RedState, aux: Aux, act_bits: jax.Array) -> jax.Array:
+    """[V] bool — do the *active* window entries form a clique?
+
+    Exact when win_complete (window = full static neighbor list); the caller
+    must gate on win_complete.  Ghost pairs have no stored edge, so ≥2 active
+    ghost neighbors naturally fail — matching "a clique in G_i contains at
+    most one ghost".
+    """
+    D = aux.window.shape[1]
+    ok = jnp.ones(state.w.shape[0], bool)
+    for i in range(D):
+        need = act_bits & ~jnp.int32(1 << i)
+        have = aux.win_adj_bits[:, i]
+        active_i = (act_bits >> i) & 1
+        bad = (active_i == 1) & ((need & ~have) != 0)
+        ok &= ~bad
+    return ok
+
+
+# --------------------------------------------------------------------- #
+# rule: Distributed Simplicial Vertex (Reduction 4.4)
+# --------------------------------------------------------------------- #
+def rule_simplicial(state: RedState, aux: Aux,
+                    ctx: "SweepCtx" = None) -> RedState:
+    V = state.w.shape[0]
+    active = _active(state)
+    eact = _edge_active(aux, active)
+    if ctx is None:
+        act_bits = _window_active_bits(state, aux)
+        clique = _is_clique(state, aux, act_bits)
+        m = _nbr_max(aux, eact, state.w, V)
+    else:
+        act_bits, clique, m = ctx.act_bits, ctx.clique, ctx.M
+    cand = (
+        aux.is_local & active & aux.win_complete & clique & (state.w >= m)
+    )
+    acc = _accept_independent(aux, eact, cand, V)
+    return _apply_include(state, aux, eact, acc)
+
+
+# --------------------------------------------------------------------- #
+# rule: Dist. Simplicial Weight Transfer (Reduction 4.5)
+# --------------------------------------------------------------------- #
+def rule_weight_transfer(state: RedState, aux: Aux,
+                         ctx: "SweepCtx" = None) -> RedState:
+    V = state.w.shape[0]
+    D = aux.window.shape[1]
+    active = _active(state)
+    eact = _edge_active(aux, active)
+    if ctx is None:
+        act_bits = _window_active_bits(state, aux)
+        clique = _is_clique(state, aux, act_bits)
+        m = _nbr_max(aux, eact, state.w, V)
+        deg = _act_deg(aux, eact, V)
+    else:
+        act_bits, clique, m, deg = ctx.act_bits, ctx.clique, ctx.M, ctx.deg
+
+    # v must be max-weight among the simplicial vertices of N(v).  A neighbor
+    # whose simpliciality we cannot decide (incomplete window) blocks v.
+    simpl_known = aux.win_complete & clique
+    nbr_blocks = eact & (state.w[aux.col] > state.w[aux.row]) & (
+        simpl_known[aux.col] | ~aux.win_complete[aux.col]
+    )
+    blocked = segment_max(
+        nbr_blocks.astype(jnp.int32), aux.row, num_segments=V
+    ) > 0
+
+    cand = (
+        aux.is_local & active & ~aux.is_iface & simpl_known
+        & (state.w < m) & ~blocked & (deg >= 1)
+    )
+    # unique within two hops (gid priority) => disjoint closed neighborhoods
+    m1 = segment_max(
+        jnp.where(eact & cand[aux.col], aux.gid[aux.col], -1), aux.row,
+        num_segments=V,
+    )
+    m1 = jnp.maximum(m1, -1)
+    m2 = segment_max(jnp.where(eact, m1[aux.col], -1), aux.row, num_segments=V)
+    m2 = jnp.maximum(m2, -1)
+    acc = cand & (aux.gid > m1) & (aux.gid >= m2)
+
+    # apply the fold: remove X = {u in N[v]: w(u) <= w(v)}, transfer weight.
+    # entry activity here must be FRESH (application, not test)
+    fresh_bits = act_bits if ctx is None else _window_active_bits(state, aux)
+    wv = state.w
+    tgt = aux.window  # [V, D]
+    ent_active = ((fresh_bits[:, None] >> jnp.arange(D)[None, :]) & 1) == 1
+    accb = acc[:, None]
+    excl_upd = accb & ent_active & (state.w[tgt] <= wv[:, None])
+    dec_upd = accb & ent_active & (state.w[tgt] > wv[:, None])
+    nil_slot = V - 1
+    status = state.status.at[jnp.where(excl_upd, tgt, nil_slot)].set(
+        jnp.where(excl_upd, jnp.int8(EXCLUDED), jnp.int8(EXCLUDED))
+    )
+    # (scatter writes EXCLUDED either way; nil slot is EXCLUDED by invariant)
+    status = jnp.where(acc, jnp.int8(FOLDED), status)
+    w = state.w.at[jnp.where(dec_upd, tgt, nil_slot)].add(
+        jnp.where(dec_upd, -wv[:, None], 0)
+    )
+    w = w.at[nil_slot].set(0)
+    offset = state.offset + jnp.where(acc, wv, 0).sum(dtype=jnp.int32)
+    state = state._replace(
+        w=w, status=status, offset=offset, changed=state.changed | acc.any()
+    )
+    idx = jnp.arange(V, dtype=jnp.int32)
+    return _log_append(state, acc, LOG_WT, idx, idx)
+
+
+# --------------------------------------------------------------------- #
+# rule: Distributed Basic Single-Edge (Reduction 4.6)
+# --------------------------------------------------------------------- #
+def rule_basic_single_edge(state: RedState, aux: Aux,
+                           ctx: "SweepCtx" = None) -> RedState:
+    V = state.w.shape[0]
+    active = _active(state)
+    eact = _edge_active(aux, active)
+    aw = _aw(state, active)
+    s = ctx.S if ctx is not None else _nbr_sum(aux, eact, aw, V)
+    # capped common-neighborhood weight (lower bound => conservative)
+    c = jnp.where(
+        active[aux.edge_common], aw[aux.edge_common], 0
+    ).sum(axis=1)
+    val = s[aux.row] - c  # >= true ω(N(u) \ N(v)) which contains v itself
+    test = (
+        eact
+        & aux.is_local[aux.row] & aux.is_local[aux.col]
+        & (val <= state.w[aux.row])
+        & (aux.gid[aux.row] > aux.gid[aux.col])  # ascending certificate chain
+    )
+    excl = segment_max(test.astype(jnp.int32), aux.col, num_segments=V) > 0
+    status = jnp.where(
+        excl & active & aux.is_local, jnp.int8(EXCLUDED), state.status
+    )
+    fired = (excl & active & aux.is_local).any()
+    return state._replace(status=status, changed=state.changed | fired)
+
+
+# --------------------------------------------------------------------- #
+# rule: Dist. Extended Single-Edge (Reduction 4.7)
+# --------------------------------------------------------------------- #
+def rule_extended_single_edge(state: RedState, aux: Aux,
+                              ctx: "SweepCtx" = None) -> RedState:
+    V = state.w.shape[0]
+    active = _active(state)
+    eact = _edge_active(aux, active)
+    aw = _aw(state, active)
+    s = ctx.S if ctx is not None else _nbr_sum(aux, eact, aw, V)
+    # edge e = (v=row, u=col):  w(v) >= S(v) - aw(u)  => exclude common nbrs
+    test = (
+        eact
+        & aux.is_local[aux.row] & aux.is_local[aux.col]
+        & (s[aux.row] - aw[aux.col] <= state.w[aux.row])
+    )
+    min_gid = jnp.minimum(aux.gid[aux.row], aux.gid[aux.col])
+    tgt = aux.edge_common  # [E, Dc]
+    upd = (
+        test[:, None]
+        & active[tgt] & aux.is_local[tgt]
+        & (aux.gid[tgt] < min_gid[:, None])
+        & (aux.gid[tgt] >= 0)
+    )
+    nil_slot = V - 1
+    status = state.status.at[jnp.where(upd, tgt, nil_slot)].set(jnp.int8(EXCLUDED))
+    fired = upd.any()
+    return state._replace(status=status, changed=state.changed | fired)
+
+
+# --------------------------------------------------------------------- #
+# rule: Distributed Heavy Vertex (Reduction 4.2) — exact sub-MWIS
+# --------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("heavy_k",))
+def _alpha_neighborhood(
+    w: jax.Array, status: jax.Array, aux: Aux, heavy_k: int
+) -> jax.Array:
+    """[V] i32 — exact α(G_i[N_i(v)]) for active windows with ≤K active
+    entries; 2^K subset enumeration against static adjacency bitmasks (the
+    KaMIS-wB&R stand-in, vectorised for the VPU/MXU)."""
+    V, D = aux.window.shape
+    K = heavy_k
+    active = status == UNDECIDED
+    ent_ok = active[aux.window] & (aux.gid[aux.window] >= 0)  # [V, D]
+    # stable-sort entries: active first, keep the first K
+    order = jnp.argsort(~ent_ok, axis=1, stable=True)[:, :K]  # [V, K]
+    ent = jnp.take_along_axis(aux.window, order, axis=1)      # [V, K]
+    ent_act = jnp.take_along_axis(ent_ok, order, axis=1)      # [V, K]
+    wk = jnp.where(ent_act, w[ent], 0).astype(jnp.int32)      # [V, K]
+    # permuted adjacency bits: bit j of row i = adjacency(order_i, order_j)
+    bits_full = jnp.take_along_axis(aux.win_adj_bits, order, axis=1)  # [V, K]
+    adj = jnp.zeros((V, K), jnp.int32)
+    for j in range(K):
+        oj = order[:, j]
+        bit_j = (bits_full >> oj[:, None]) & 1  # [V, K] adjacency to entry j
+        adj |= bit_j << j
+    subsets = jnp.arange(1 << K, dtype=jnp.int32)               # [T]
+    sel = ((subsets[:, None] >> jnp.arange(K)[None, :]) & 1)     # [T, K]
+    totals = wk @ sel.T.astype(jnp.int32)                        # [V, T]
+    conflict = jnp.zeros(totals.shape, bool)
+    for i in range(K):
+        in_sub = sel[:, i] == 1                                  # [T]
+        hits = (subsets[None, :] & adj[:, i : i + 1]) != 0       # [V, T]
+        conflict |= in_sub[None, :] & hits
+    alpha = jnp.where(conflict, -1, totals).max(axis=1)
+    return jnp.maximum(alpha, 0)
+
+
+def rule_heavy_vertex(state: RedState, aux: Aux, heavy_k: int = 8) -> RedState:
+    V = state.w.shape[0]
+    active = _active(state)
+    eact = _edge_active(aux, active)
+    deg = _act_deg(aux, eact, V)
+    alpha = _alpha_neighborhood(state.w, state.status, aux, heavy_k)
+    cand = (
+        aux.is_local & active & aux.win_complete
+        & (deg <= heavy_k) & (state.w >= alpha)
+    )
+    acc = _accept_independent(aux, eact, cand, V)
+    return _apply_include(state, aux, eact, acc)
+
+
+# --------------------------------------------------------------------- #
+# sweep drivers
+# --------------------------------------------------------------------- #
+CHEAP_RULES = (
+    rule_degree_one,
+    rule_neighborhood_removal,
+    rule_weight_transfer,
+    rule_simplicial,
+    rule_basic_single_edge,
+    rule_extended_single_edge,
+)
+
+
+def sweep_cheap(state: RedState, aux: Aux) -> RedState:
+    """One pass of the cheap rule families, in the paper's §5.1 order."""
+    for rule in CHEAP_RULES:
+        state = rule(state, aux)
+    return state
+
+
+def sweep_cheap_fused(state: RedState, aux: Aux) -> RedState:
+    """Fused sweep: the expensive aggregates (S, deg, M, clique bits) are
+    computed ONCE per sweep and shared by all rule families (§Perf H3) —
+    tests become conservatively stale, applications stay fresh."""
+    ctx = compute_ctx(state, aux)
+    for rule in CHEAP_RULES:
+        state = rule(state, aux, ctx)
+    return state
+
+
+def reconstruct_members(state: RedState, aux: Aux) -> jax.Array:
+    """Replay the fold log in reverse; returns [V] bool membership.
+
+    INCLUDED statuses seed the set; FOLD1 (v ∈ I ⟺ u ∉ I) and WT
+    (v ∈ I ⟺ I ∩ N(v) = ∅, window-complete by rule gating) records replay
+    newest-first.  All record targets are local by rule construction.
+    """
+    in_set = state.status == INCLUDED
+
+    def body(i, in_set):
+        k = state.log_n - 1 - i
+        kind = state.log_kind[k]
+        v = state.log_v[k]
+        u = state.log_u[k]
+        fold1_val = ~in_set[u]
+        wt_entries = aux.window[v]
+        wt_val = ~(in_set[wt_entries] & (aux.gid[wt_entries] >= 0)).any()
+        val = jnp.where(kind == LOG_FOLD1, fold1_val, wt_val)
+        return in_set.at[v].set(val)
+
+    return jax.lax.fori_loop(0, state.log_n, body, in_set)

@@ -1,0 +1,435 @@
+"""Distributed MWIS solvers (§6): GS/GA, RGS/RGA, RnPS/RnPA.
+
+  * greedy (GS/GA)          — distributed weighted Luby: a vertex joins the
+    solution iff its (weight, gid) is lexicographically maximal over its
+    active neighborhood; border synchronized every round; PE-rank/id
+    tie-breaking.  Deterministic == sequential priority greedy
+    (`sequential.solve_greedy` is the oracle).
+  * reduce-and-greedy (RGS/RGA) — DisRedu{S,A} to the global fixpoint, then
+    greedy on the kernel.
+  * reduce-and-peel (RnPS/RnPA) — loop { reduce to fixpoint; every PE peels
+    its locally worst vertex argmax ω(N(v)) − ω(v) } until empty (HtWIS
+    criterion, one peel per PE per round as in the paper).
+
+All algorithms are expressed once over abstract collectives and instantiated
+for the union (single-device simulation) and shard_map (production) paths.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.ops import segment_max
+
+from repro.core import exchange as X
+from repro.core import rules as R
+from repro.core.distributed import (
+    DisReduConfig, UnionProblem, build_union_problem,
+)
+from repro.core.local_reduce import local_reduce
+from repro.core.partition import PartitionedGraph
+
+UNDECIDED, INCLUDED, EXCLUDED, FOLDED = 0, 1, 2, 3
+I32_MIN = jnp.iinfo(jnp.int32).min
+
+
+class Ctx(NamedTuple):
+    """Abstract SPMD context: exchange + global-any + per-PE peel."""
+
+    exchange: Callable  # state -> (state, changed)
+    gany: Callable      # bool scalar -> bool scalar (global OR)
+    peel: Callable      # (state, score [V]) -> state  (one peel per PE)
+
+
+# --------------------------------------------------------------------- #
+# algorithm bodies (layout-agnostic)
+# --------------------------------------------------------------------- #
+def _reduce_to_fixpoint(state, aux, ctx: Ctx, cfg: DisReduConfig):
+    def body(carry):
+        state, rounds, _ = carry
+        snap_s, snap_w = state.status, state.w
+        state = local_reduce(
+            state, aux, heavy_k=cfg.heavy_k, use_heavy=cfg.use_heavy,
+            max_sweeps=cfg.sweeps_per_round, fused=cfg.fused_sweeps,
+        )
+        state, _ = ctx.exchange(state)
+        changed = ctx.gany(
+            (state.status != snap_s).any() | (state.w != snap_w).any()
+        )
+        return state, rounds + 1, changed
+
+    def cond(carry):
+        _, rounds, changed = carry
+        return changed & (rounds < cfg.max_rounds)
+
+    state, rounds, _ = jax.lax.while_loop(
+        cond, body, (state, jnp.zeros((), jnp.int32), jnp.ones((), bool))
+    )
+    return state, rounds
+
+
+def _greedy_rounds(state, aux, ctx: Ctx, max_rounds: int = 100_000):
+    """Weighted-Luby rounds until no vertex is UNDECIDED anywhere."""
+    V = aux.gid.shape[0]
+
+    def body(carry):
+        state, rounds, _ = carry
+        active = state.status == UNDECIDED
+        eact = active[aux.row] & active[aux.col]
+        mw = jnp.maximum(
+            segment_max(
+                jnp.where(eact, state.w[aux.col], I32_MIN), aux.row,
+                num_segments=V,
+            ),
+            I32_MIN,
+        )
+        # tie-break matches the sequential oracle: smaller id wins on ties
+        big = jnp.iinfo(jnp.int32).max
+        mg = jnp.minimum(
+            jax.ops.segment_min(
+                jnp.where(
+                    eact & (state.w[aux.col] == mw[aux.row]),
+                    aux.gid[aux.col], big,
+                ),
+                aux.row, num_segments=V,
+            ),
+            big,
+        )
+        win = (
+            aux.is_local & active
+            & ((state.w > mw) | ((state.w == mw) & (aux.gid < mg)))
+        )
+        state = R._apply_include(state, aux, eact, win)
+        state, _ = ctx.exchange(state)
+        remaining = ctx.gany((aux.is_local & (state.status == UNDECIDED)).any())
+        return state, rounds + 1, remaining
+
+    def cond(carry):
+        _, rounds, remaining = carry
+        return remaining & (rounds < max_rounds)
+
+    remaining0 = ctx.gany((aux.is_local & (state.status == UNDECIDED)).any())
+    state, _, _ = jax.lax.while_loop(
+        cond, body, (state, jnp.zeros((), jnp.int32), remaining0)
+    )
+    return state
+
+
+def _rnp_loop(state, aux, ctx: Ctx, cfg: DisReduConfig,
+              max_peels: int = 1_000_000):
+    """reduce → peel-one-per-PE → repeat until globally empty (§6)."""
+    V = aux.gid.shape[0]
+
+    def body(carry):
+        state, it, _ = carry
+        state, _ = _reduce_to_fixpoint(state, aux, ctx, cfg)
+        active = state.status == UNDECIDED
+        eact = active[aux.row] & active[aux.col]
+        aw = jnp.where(active, state.w, 0)
+        s = jax.ops.segment_sum(
+            jnp.where(eact, aw[aux.col], 0), aux.row, num_segments=V
+        )
+        score = jnp.where(aux.is_local & active, s - state.w, I32_MIN)
+        state = ctx.peel(state, score)
+        remaining = ctx.gany((aux.is_local & (state.status == UNDECIDED)).any())
+        return state, it + 1, remaining
+
+    def cond(carry):
+        _, it, remaining = carry
+        return remaining & (it < max_peels)
+
+    remaining0 = ctx.gany((aux.is_local & (state.status == UNDECIDED)).any())
+    state, _, _ = jax.lax.while_loop(
+        cond, body, (state, jnp.zeros((), jnp.int32), remaining0)
+    )
+    return state
+
+
+def run_algorithm(state, aux, ctx: Ctx, cfg: DisReduConfig, algo: str):
+    """algo ∈ {reduce, greedy, rg, rnp} → final state (all local decided for
+    solver algos; kernel remains for 'reduce')."""
+    if algo == "reduce":
+        state, _ = _reduce_to_fixpoint(state, aux, ctx, cfg)
+    elif algo == "greedy":
+        state = _greedy_rounds(state, aux, ctx)
+    elif algo == "rg":
+        state, _ = _reduce_to_fixpoint(state, aux, ctx, cfg)
+        state = _greedy_rounds(state, aux, ctx)
+    elif algo == "rnp":
+        state = _rnp_loop(state, aux, ctx, cfg)
+    else:
+        raise ValueError(f"unknown algo {algo!r}")
+    return state
+
+
+# --------------------------------------------------------------------- #
+# union instantiation (single-device SPMD simulation)
+# --------------------------------------------------------------------- #
+def _union_ctx(prob: UnionProblem) -> Ctx:
+    p, V = prob.p, prob.w0.shape[0] // prob.p
+
+    def exch(state):
+        return X.exchange_union(state, prob.aux, prob.halo, p=p)
+
+    def peel(state, score):
+        sc = score.reshape(p, V)
+        top = jnp.argmax(sc, axis=1)
+        has = sc[jnp.arange(p), top] > I32_MIN
+        flat = jnp.where(has, top + jnp.arange(p) * V, p * V - 1)
+        # excluding the per-PE argmax; nil slot absorbs empty PEs
+        status = state.status.at[flat].set(
+            jnp.where(has, jnp.int8(EXCLUDED), jnp.int8(EXCLUDED))
+        )
+        # nil slots are EXCLUDED already, so unconditional set is safe
+        return state._replace(status=status)
+
+    return Ctx(exchange=exch, gany=lambda x: x, peel=peel)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("algo", "heavy_k", "use_heavy", "sweeps", "max_rounds",
+                     "p", "fused"),
+)
+def _solve_union_jit(w0, is_local, is_ghost, aux, halo, *, algo, heavy_k,
+                     use_heavy, sweeps, max_rounds, p, fused=False):
+    prob = UnionProblem(w0, is_local, is_ghost, aux, halo, p, 0)
+    cfg = DisReduConfig(
+        heavy_k=heavy_k, use_heavy=use_heavy,
+        mode="sync" if sweeps >= 1_000_000 else "async",
+        stale_sweeps=sweeps, max_rounds=max_rounds, fused_sweeps=fused,
+    )
+    ctx = _union_ctx(prob)
+    state = R.init_state(w0, is_local, is_ghost)
+    state = run_algorithm(state, aux, ctx, cfg, algo)
+    members = R.reconstruct_members(state, aux)
+    return state, members
+
+
+def solve(
+    pg: PartitionedGraph,
+    algo: str,
+    cfg: DisReduConfig = DisReduConfig(),
+) -> Tuple[np.ndarray, R.RedState]:
+    """Solve MWIS heuristically; returns (global member mask, final state).
+
+    algo: 'greedy' (GS/GA), 'rg' (RGS/RGA), 'rnp' (RnPS/RnPA) — the S/A
+    flavour is chosen by cfg.mode ('sync'/'async').
+    """
+    prob = build_union_problem(pg)
+    state, in_set = _solve_union_jit(
+        prob.w0, prob.is_local, prob.is_ghost, prob.aux, prob.halo,
+        algo=algo, heavy_k=cfg.heavy_k, use_heavy=cfg.use_heavy,
+        sweeps=cfg.sweeps_per_round, max_rounds=cfg.max_rounds, p=prob.p,
+        fused=cfg.fused_sweeps,
+    )
+    members = np.zeros(pg.n_global, dtype=bool)
+    sel = np.asarray(in_set) & np.asarray(prob.is_local)
+    members[np.asarray(prob.aux.gid)[sel]] = True
+    return members, state
+
+
+# --------------------------------------------------------------------- #
+# shard_map instantiation (production / dry-run)
+# --------------------------------------------------------------------- #
+def solve_compact(
+    g,
+    p: int,
+    algo: str,
+    cfg: DisReduConfig = DisReduConfig(),
+    *,
+    pre_rounds: int = 2,
+    window_cap: int = 16,
+) -> Tuple[np.ndarray, dict]:
+    """Beyond-paper driver (EXPERIMENTS §Perf H3 next-step): kernel
+    compaction.
+
+    The paper prunes redundant rule tests with dependency checking; under
+    static shapes every sweep still pays for the full padded instance.
+    This driver runs `pre_rounds` DisRedu rounds, *extracts the kernel*
+    (alive vertices with their current weights), repartitions the much
+    smaller residual, solves it with `algo`, and stitches the solution
+    back through the phase-1 reconstruction — later sweeps cost ∝ kernel
+    size instead of input size.  Exactness is unchanged: the kernel is an
+    equivalent instance by the paper's Theorems 4.x.
+
+    Returns (global member mask, stats).
+    """
+    import time as _time
+
+    from repro.core import partition as _part
+    from repro.core.distributed import disredu, kernel_stats
+
+    t0 = _time.time()
+    pg = _part.partition_graph(g, p, window_cap=window_cap)
+    pre_cfg = DisReduConfig(
+        heavy_k=cfg.heavy_k, use_heavy=cfg.use_heavy, mode=cfg.mode,
+        stale_sweeps=cfg.stale_sweeps, exchange=cfg.exchange,
+        fused_sweeps=cfg.fused_sweeps, max_rounds=pre_rounds,
+    )
+    state, prob, rounds = disredu(pg, pre_cfg)
+    nv, ne = kernel_stats(pg, state)
+    t_phase1 = _time.time() - t0
+
+    status = np.asarray(state.status)
+    w = np.asarray(state.w)
+    is_local = np.asarray(prob.is_local)
+    gids = np.asarray(prob.aux.gid)
+
+    alive_g = np.zeros(g.n, dtype=bool)
+    w_g = np.zeros(g.n, dtype=np.int64)
+    sel = (status == UNDECIDED) & is_local
+    alive_g[gids[sel]] = True
+    w_g[gids[sel]] = w[sel]
+
+    members = np.zeros(g.n, dtype=bool)
+    if alive_g.any():
+        # induced residual with CURRENT (possibly folded-down) weights
+        sub, old_ids = g.induced_subgraph(alive_g)
+        sub = type(sub)(indptr=sub.indptr, indices=sub.indices,
+                        weights=w_g[old_ids].astype(np.int32))
+        pg2 = _part.partition_graph(sub, p, window_cap=window_cap)
+        members2, _ = solve(pg2, algo, cfg)
+        members[old_ids[members2]] = True
+
+    # stitch back: phase-2 decisions seed the phase-1 reconstruction
+    status2 = status.copy()
+    member_of_gid = np.zeros(g.n + 1, dtype=bool)
+    member_of_gid[:g.n] = members
+    und = status == UNDECIDED
+    decided_in = member_of_gid[np.where(gids >= 0, gids, g.n)] & und
+    status2[und] = EXCLUDED
+    status2[decided_in] = INCLUDED
+    st2 = state._replace(status=jnp.asarray(status2.astype(np.int8)))
+    in_set = np.asarray(R.reconstruct_members(st2, prob.aux))
+    out = np.zeros(g.n, dtype=bool)
+    keep = in_set & is_local
+    out[gids[keep]] = True
+    stats = dict(
+        pre_rounds=rounds, kernel_v=nv, kernel_e=ne,
+        kernel_ratio=nv / max(g.n, 1), t_phase1=t_phase1,
+    )
+    return out, stats
+
+
+def solver_shard_map_fn(pg: PartitionedGraph, cfg: DisReduConfig, mesh,
+                        algo: str, axis: str = "pe"):
+    """Build the shard_map'd solver over stacked [p, ...] arrays."""
+    from jax.sharding import PartitionSpec as P
+
+    arrs = pg.device_arrays()
+    keys = list(arrs.keys())
+    L, G = pg.L, pg.G
+
+    def per_pe(*args):
+        a = dict(zip(keys, [x.reshape(x.shape[1:]) for x in args]))
+        aux = R.Aux(
+            row=a["row"], col=a["col"], gid=a["gid"],
+            is_local=a["is_local"], is_iface=a["is_iface"],
+            owner_rank=a["owner_pe"], window=a["window"],
+            win_complete=a["win_complete"], win_adj_bits=a["win_adj_bits"],
+            edge_common=a["edge_common"],
+        )
+        halo = X.Halo(
+            iface_slots=a["iface_slots"],
+            ghost_vertex=L + jnp.arange(G, dtype=jnp.int32),
+            ghost_owner_pe=jnp.maximum(a["owner_pe"][L : L + G], 0),
+            ghost_owner_slot=a["ghost_owner_slot"],
+            ghost_valid=a["is_ghost"][L : L + G],
+            send_slot=a["send_slot"], recv_ghost=a["recv_ghost"],
+        )
+
+        def exch(state):
+            return X.exchange_shmap(
+                state, aux, halo, axis=axis, method=cfg.exchange
+            )
+
+        def gany(x):
+            return jax.lax.psum(x.astype(jnp.int32), axis) > 0
+
+        def peel(state, score):
+            top = jnp.argmax(score)
+            has = score[top] > I32_MIN
+            idx = jnp.where(has, top, score.shape[0] - 1)
+            status = state.status.at[idx].set(jnp.int8(EXCLUDED))
+            return state._replace(status=status)
+
+        ctx = Ctx(exchange=exch, gany=gany, peel=peel)
+        state = R.init_state(a["w0"], a["is_local"], a["is_ghost"])
+        state = run_algorithm(state, aux, ctx, cfg, algo)
+        members = R.reconstruct_members(state, aux)
+        ex = lambda t: t.reshape((1,) + t.shape)
+        return (ex(state.w), ex(state.status), ex(members),
+                ex(state.offset), ex(state.log_n))
+
+    in_specs = tuple(P(axis) for _ in keys)
+    out_specs = (P(axis),) * 5
+    fn = jax.shard_map(
+        per_pe, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )
+
+    def run(arrays=None):
+        arrays = arrays or {k: jnp.asarray(v) for k, v in arrs.items()}
+        return fn(*(arrays[k] for k in keys))
+
+    return run, keys
+
+
+def sweep_probe_shard_map_fn(pg: PartitionedGraph, cfg: DisReduConfig, mesh,
+                             axis: str = "pe"):
+    """Loop-free roofline probe: exactly ONE rule sweep + ONE halo exchange
+    (+ one heavy-vertex pass).  DisRedu's while-loops have data-dependent
+    trip counts, so the honest static roofline unit is per sweep-round —
+    cost_analysis of this probe is exact (no hidden loop bodies)."""
+    from jax.sharding import PartitionSpec as P
+
+    arrs = pg.device_arrays()
+    keys = list(arrs.keys())
+    L, G = pg.L, pg.G
+
+    def per_pe(*args):
+        a = dict(zip(keys, [x.reshape(x.shape[1:]) for x in args]))
+        aux = R.Aux(
+            row=a["row"], col=a["col"], gid=a["gid"],
+            is_local=a["is_local"], is_iface=a["is_iface"],
+            owner_rank=a["owner_pe"], window=a["window"],
+            win_complete=a["win_complete"], win_adj_bits=a["win_adj_bits"],
+            edge_common=a["edge_common"],
+        )
+        halo = X.Halo(
+            iface_slots=a["iface_slots"],
+            ghost_vertex=L + jnp.arange(G, dtype=jnp.int32),
+            ghost_owner_pe=jnp.maximum(a["owner_pe"][L : L + G], 0),
+            ghost_owner_slot=a["ghost_owner_slot"],
+            ghost_valid=a["is_ghost"][L : L + G],
+            send_slot=a["send_slot"], recv_ghost=a["recv_ghost"],
+        )
+        state = R.init_state(a["w0"], a["is_local"], a["is_ghost"])
+        if cfg.fused_sweeps:
+            state = R.sweep_cheap_fused(state, aux)
+        else:
+            state = R.sweep_cheap(state, aux)
+        if cfg.use_heavy:
+            state = R.rule_heavy_vertex(state, aux, cfg.heavy_k)
+        state, _ = X.exchange_shmap(
+            state, aux, halo, axis=axis, method=cfg.exchange
+        )
+        ex = lambda t: t.reshape((1,) + t.shape)
+        return ex(state.w), ex(state.status), ex(state.offset)
+
+    fn = jax.shard_map(
+        per_pe, mesh=mesh,
+        in_specs=tuple(P(axis) for _ in keys),
+        out_specs=(P(axis),) * 3,
+        check_vma=False,
+    )
+
+    def run(arrays):
+        return fn(*(arrays[k] for k in keys))
+
+    return run, keys

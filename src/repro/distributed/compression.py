@@ -1,0 +1,101 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At 2+ pods the gradient all-reduce crosses the slow inter-pod links; the
+standard mitigations implemented here:
+
+  * int8 quantization with per-tensor scale + **error feedback** (the
+    quantization residual is carried into the next step, preserving
+    convergence — Seide et al. / EF-SGD),
+  * top-k sparsification with error feedback (bandwidth ∝ k),
+  * hierarchical schedule helper: reduce-scatter intra-pod (fast ICI),
+    all-reduce only the 1/N_pod shard across pods, all-gather intra-pod —
+    expressed as the axis ordering the train step passes to `psum`.
+
+These transforms are pure jnp (jit-safe) and compose with `shard_map`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any  # same pytree as grads
+
+
+def ef_init(grads_like: Any) -> EFState:
+    return EFState(
+        residual=jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads_like
+        )
+    )
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.abs(x).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_int8_ef(grads: Any, ef: EFState) -> Tuple[Any, Any, EFState]:
+    """Returns (quantized pytree, scales pytree, new EF state)."""
+
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = quantize_int8(x)
+        deq = dequantize_int8(q, s)
+        return q, s, x - deq
+
+    qs, ss, rs = [], [], []
+    leaves, td = jax.tree.flatten(grads)
+    for g, r in zip(leaves, jax.tree.leaves(ef.residual)):
+        q, s, nr = one(g, r)
+        qs.append(q); ss.append(s); rs.append(nr)
+    uf = lambda xs: jax.tree.unflatten(td, xs)
+    return uf(qs), uf(ss), EFState(residual=uf(rs))
+
+
+def topk_ef(grads: Any, ef: EFState, k_frac: float = 0.01):
+    """Top-k magnitude sparsification with error feedback."""
+
+    def one(g, r):
+        x = (g.astype(jnp.float32) + r).reshape(-1)
+        k = max(1, int(x.shape[0] * k_frac))
+        vals, idx = jax.lax.top_k(jnp.abs(x), k)
+        kept = x[idx]
+        sparse = jnp.zeros_like(x).at[idx].set(kept)
+        return (idx, kept), x - sparse
+
+    outs, rs = [], []
+    leaves, td = jax.tree.flatten(grads)
+    for g, r in zip(leaves, jax.tree.leaves(ef.residual)):
+        o, nr = one(g, r)
+        outs.append(o); rs.append(nr.reshape(g.shape))
+    uf = lambda xs: jax.tree.unflatten(td, xs)
+    return uf(outs), EFState(residual=uf(rs))
+
+
+def hierarchical_psum(x: jax.Array, *, pod_axis: str = "pod",
+                      data_axis: str = "data") -> jax.Array:
+    """Reduce-scatter intra-pod → cross-pod psum on the shard → all-gather.
+
+    Inside shard_map over a ("pod", "data", ...) mesh this is the
+    bandwidth-optimal hierarchy: the slow inter-pod link carries 1/|data|
+    of the gradient bytes.
+    """
+    n = jax.lax.axis_size(data_axis)
+    pad = (-x.shape[0]) % n
+    xp = jnp.pad(x.reshape(-1), (0, x.size % 1 + pad))[: x.size + pad]
+    shard = jax.lax.psum_scatter(
+        xp.reshape(n, -1), data_axis, scatter_dimension=0, tiled=False
+    )
+    shard = jax.lax.psum(shard, pod_axis)
+    full = jax.lax.all_gather(shard, data_axis, tiled=False)
+    return full.reshape(-1)[: x.size].reshape(x.shape)

@@ -1,0 +1,121 @@
+"""Fault tolerance & elasticity for 1000+-node deployments.
+
+What actually fails at scale and what this module does about it:
+
+  * **Node loss** — training: checkpoint/restart is the recovery primitive
+    (atomic-commit checkpoints in `checkpoint.py`; `TrainSupervisor` wraps
+    the step loop with save cadence + restore-on-restart + deterministic
+    data-skip so restarts replay no batch twice).  MWIS: the reduction
+    state (w, status, fold log, offset) *is* the checkpoint — rounds are
+    idempotent from any consistent state, so restart = reload + continue.
+  * **Stragglers** — DisReduA's bounded-staleness exchange already removes
+    the per-round straggler barrier for MWIS (a slow PE delays neighbors by
+    at most one halo exchange, not the whole fixpoint).  For training, the
+    supervisor tracks a rolling step-time EWMA and flags outliers
+    (`straggler_factor`) — the deployment hook decides to re-shard or evict.
+  * **Elastic scaling** — `remesh_plan` recomputes the vertex partition for
+    a new p and maps old→new PE state; checkpoints are stored logically
+    (unsharded) so parameter state re-shards by construction
+    (`CheckpointManager.restore(shardings=new)`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+from repro.distributed.checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """Rolling EWMA of step times; flags steps slower than factor×EWMA."""
+
+    alpha: float = 0.1
+    factor: float = 2.0
+    ewma: Optional[float] = None
+    flagged: int = 0
+
+    def observe(self, dt: float) -> bool:
+        slow = self.ewma is not None and dt > self.factor * self.ewma
+        self.ewma = dt if self.ewma is None else (
+            (1 - self.alpha) * self.ewma + self.alpha * dt
+        )
+        if slow:
+            self.flagged += 1
+        return slow
+
+
+class TrainSupervisor:
+    """Checkpoint-cadenced, restart-safe step loop driver.
+
+    The data pipeline must be indexable by step (deterministic): on restore
+    the loop resumes at `start_step` without replaying batches.
+    """
+
+    def __init__(
+        self,
+        ckpt: CheckpointManager,
+        *,
+        save_every: int = 100,
+        straggler: Optional[StragglerMonitor] = None,
+    ):
+        self.ckpt = ckpt
+        self.save_every = save_every
+        self.straggler = straggler or StragglerMonitor()
+        self.events: list = []
+
+    def resume_step(self) -> int:
+        latest = self.ckpt.latest_step()
+        return 0 if latest is None else latest + 1
+
+    def run(
+        self,
+        state: Any,
+        step_fn: Callable[[Any, int], Any],
+        n_steps: int,
+        *,
+        state_template: Optional[Any] = None,
+    ) -> Any:
+        start = self.resume_step()
+        if start > 0:
+            state = self.ckpt.restore(state_template or state)
+            self.events.append(("restored", start - 1))
+        for step in range(start, n_steps):
+            t0 = time.monotonic()
+            state = step_fn(state, step)
+            dt = time.monotonic() - t0
+            if self.straggler.observe(dt):
+                self.events.append(("straggler", step, dt))
+            if (step + 1) % self.save_every == 0 or step == n_steps - 1:
+                self.ckpt.save(step, state)
+        self.ckpt.wait()
+        return state
+
+
+def remesh_plan(n_global: int, p_old: int, p_new: int) -> Dict[str, Any]:
+    """Vertex-block mapping for elastic MWIS re-partitioning.
+
+    Contiguous blocks make elastic remaps pure interval arithmetic: each new
+    PE's block is covered by a small set of old-PE intervals.  Returns, for
+    every new PE, the (old_pe, old_lo, old_hi, new_lo) copy descriptors a
+    deployment would turn into point-to-point transfers.
+    """
+    old = np.linspace(0, n_global, p_old + 1).astype(np.int64)
+    new = np.linspace(0, n_global, p_new + 1).astype(np.int64)
+    plan = []
+    for j in range(p_new):
+        lo, hi = int(new[j]), int(new[j + 1])
+        segs = []
+        for i in range(p_old):
+            a, b = max(lo, int(old[i])), min(hi, int(old[i + 1]))
+            if a < b:
+                segs.append(
+                    dict(old_pe=i, old_lo=a - int(old[i]),
+                         old_hi=b - int(old[i]), new_lo=a - lo, size=b - a)
+                )
+        plan.append(segs)
+    return {"p_old": p_old, "p_new": p_new, "copies": plan}

@@ -1,0 +1,1 @@
+from repro.graphs import generators  # noqa: F401

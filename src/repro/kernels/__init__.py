@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships three files:
+
+  <name>/kernel.py - pl.pallas_call + explicit BlockSpec VMEM tiling
+  <name>/ops.py    - jit'd public wrapper (host packing, fallback dispatch)
+  <name>/ref.py    - pure-jnp oracle, used by tests and as the CPU path
+
+On this CPU container kernels execute under ``interpret=True`` (tests);
+the dry-run lowers the jnp reference path (``use_pallas() == False``).
+On a real TPU deployment set REPRO_USE_PALLAS=1.
+"""
+
+import os
+
+
+def use_pallas() -> bool:
+    return os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+
+
+def interpret_mode() -> bool:
+    import jax
+
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,19 @@
+"""Public EmbeddingBag API with pallas/jnp dispatch."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import interpret_mode, use_pallas
+from repro.kernels.embedding_bag.kernel import embedding_bag_fused
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def embedding_bag(table: jax.Array, idx: jax.Array, wgt: jax.Array,
+                  *, force_pallas: bool | None = None) -> jax.Array:
+    enable = use_pallas() if force_pallas is None else force_pallas
+    if enable:
+        return embedding_bag_fused(
+            table, idx, wgt, interpret=interpret_mode()
+        )
+    return embedding_bag_ref(table, idx, wgt)

@@ -1,0 +1,13 @@
+"""jnp oracle: gather + weighted sum (the manual EmbeddingBag)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jax.Array, idx: jax.Array,
+                      wgt: jax.Array) -> jax.Array:
+    rows = table[idx]                       # [B, K, D]
+    return (rows.astype(jnp.float32)
+            * wgt[..., None].astype(jnp.float32)).sum(1).astype(table.dtype)

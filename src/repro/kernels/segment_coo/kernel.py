@@ -1,0 +1,64 @@
+"""Row-blocked segment-sum kernel (the SpMM/message-passing primitive).
+
+Layout: the host packs row-sorted COO edges into ``n_blocks`` row blocks of
+``R_BLK`` output rows each; every block's edge range is padded to a fixed
+``E_BLK`` budget (blocked-ELL).  Grid = (n_blocks,).
+
+Per grid step, VMEM holds:
+  data  [E_BLK, D]   gathered edge payloads,
+  lrow  [E_BLK, 1]   row index *within* the block (R_BLK for padding),
+  out   [R_BLK, D]   accumulator tile.
+
+TPU adaptation: the scatter-accumulate is expressed as a one-hot matmul
+(``onehot[lrow] @ data``) so it runs on the MXU instead of serialized
+dynamic-update-slices — the standard TPU trick for small-radix scatters.
+D should be lane-aligned (×128) and R_BLK sublane-aligned (×8) for full
+MXU utilization.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _seg_kernel(data_ref, lrow_ref, out_ref, *, r_blk: int):
+    data = data_ref[0]                         # [E_BLK, D]
+    lrow = lrow_ref[0][:, 0]                   # [E_BLK]
+    onehot = (
+        lrow[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, r_blk), 1)
+    ).astype(data.dtype)                       # [E_BLK, R_BLK]
+    out_ref[0] = jax.lax.dot_general(
+        onehot, data,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("r_blk", "interpret"))
+def segment_sum_blocked(
+    data: jax.Array,    # [n_blocks, E_BLK, D]
+    lrow: jax.Array,    # [n_blocks, E_BLK] int32 (R_BLK = padding)
+    *,
+    r_blk: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns [n_blocks, R_BLK, D]; caller reshapes to [n_rows, D]."""
+    n_blocks, e_blk, d = data.shape
+    # widen the padding row into an extra one-hot column? no: padding rows
+    # (lrow == R_BLK) match no iota column and contribute nowhere.
+    out = pl.pallas_call(
+        functools.partial(_seg_kernel, r_blk=r_blk),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, e_blk, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, e_blk, 1), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, r_blk, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, r_blk, d), data.dtype),
+        interpret=interpret,
+    )(data, lrow[..., None])
+    return out

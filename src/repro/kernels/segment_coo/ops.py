@@ -1,0 +1,62 @@
+"""Public segment-sum API with host-side CSR→blocked-ELL packing and
+pallas/jnp dispatch."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import interpret_mode, use_pallas
+from repro.kernels.segment_coo.kernel import segment_sum_blocked
+from repro.kernels.segment_coo.ref import segment_sum_blocked_ref
+
+
+def pack_blocks(
+    row: np.ndarray, n_rows: int, *, r_blk: int = 8,
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Host packing: row-sorted edge ids → (edge_perm [n_blocks, E_BLK],
+    lrow [n_blocks, E_BLK]).  edge_perm indexes the original edge array;
+    padding slots point at edge 0 with lrow = r_blk (ignored)."""
+    order = np.argsort(row, kind="stable")
+    rs = row[order]
+    n_blocks = (n_rows + r_blk - 1) // r_blk
+    blk_of_edge = rs // r_blk
+    counts = np.bincount(blk_of_edge, minlength=n_blocks)
+    e_blk = max(int(counts.max(initial=1)), 1)
+    edge_perm = np.zeros((n_blocks, e_blk), dtype=np.int64)
+    lrow = np.full((n_blocks, e_blk), r_blk, dtype=np.int32)
+    starts = np.zeros(n_blocks + 1, dtype=np.int64)
+    np.cumsum(counts, out=starts[1:])
+    for b in range(n_blocks):
+        sl = slice(starts[b], starts[b + 1])
+        k = starts[b + 1] - starts[b]
+        edge_perm[b, :k] = order[sl]
+        lrow[b, :k] = rs[sl] - b * r_blk
+    return edge_perm, lrow, e_blk
+
+
+def segment_sum_coo(
+    data: jax.Array,        # [E, D] edge payloads (original edge order)
+    edge_perm: jax.Array,   # [n_blocks, E_BLK] from pack_blocks
+    lrow: jax.Array,        # [n_blocks, E_BLK]
+    n_rows: int,
+    *,
+    r_blk: int = 8,
+    force_pallas: bool | None = None,
+) -> jax.Array:
+    """Blocked segment sum; returns [n_rows, D]."""
+    n_blocks = edge_perm.shape[0]
+    blocked = data[edge_perm.reshape(-1)].reshape(
+        n_blocks, edge_perm.shape[1], data.shape[-1]
+    )
+    enable = use_pallas() if force_pallas is None else force_pallas
+    if enable:
+        out = segment_sum_blocked(
+            blocked, lrow, r_blk=r_blk, interpret=interpret_mode()
+        )
+    else:
+        out = segment_sum_blocked_ref(blocked, lrow, r_blk=r_blk)
+    return out.reshape(n_blocks * r_blk, -1)[:n_rows]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the blocked segment-sum kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_blocked_ref(data: jax.Array, lrow: jax.Array, *,
+                            r_blk: int) -> jax.Array:
+    n_blocks, e_blk, d = data.shape
+
+    def one(db, lb):
+        return jax.ops.segment_sum(db, lb, num_segments=r_blk + 1)[:r_blk]
+
+    return jax.vmap(one)(data, lrow)
+
+
+def segment_sum_ref(data: jax.Array, seg: jax.Array, n: int) -> jax.Array:
+    """Plain CSR/COO segment sum (canonical semantics)."""
+    return jax.ops.segment_sum(data, seg, num_segments=n)

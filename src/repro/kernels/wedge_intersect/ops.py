@@ -1,0 +1,37 @@
+"""Public API: gather windows per edge, dispatch pallas/jnp."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import interpret_mode, use_pallas
+from repro.kernels.wedge_intersect.kernel import wedge_intersect
+from repro.kernels.wedge_intersect.ref import wedge_intersect_ref
+
+
+def common_neighbor_stats(
+    window: jax.Array,   # [V, D] capped neighbor lists (nil padded)
+    weights: jax.Array,  # [V] current weights
+    active: jax.Array,   # [V] bool
+    row: jax.Array,      # [E]
+    col: jax.Array,      # [E]
+    *,
+    force_pallas: bool | None = None,
+):
+    """(C[e], K[e]) = weighted/active common-neighborhood per edge.
+
+    Entries are drawn from W(row); membership is tested against W(col), so
+    the result is the capped lower bound the single-edge rules require.
+    """
+    wu = window[row]
+    wv = window[col]
+    ent_act = active[wu]
+    awu = jnp.where(ent_act, weights[wu], 0).astype(jnp.int32)
+    actu = ent_act.astype(jnp.int32)
+    enable = use_pallas() if force_pallas is None else force_pallas
+    if enable:
+        return wedge_intersect(
+            wu, wv, awu, actu, interpret=interpret_mode()
+        )
+    return wedge_intersect_ref(wu, wv, awu, actu)

@@ -1,0 +1,12 @@
+"""jnp oracle for wedge_intersect (materializes the [E, D, D] compare)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wedge_intersect_ref(wu, wv, awu, actu):
+    match = (wu[:, :, None] == wv[:, None, :]).any(-1) & (actu == 1)
+    c = (awu * match).sum(-1).astype(jnp.int32)
+    k = match.sum(-1).astype(jnp.int32)
+    return c, k

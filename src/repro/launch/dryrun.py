@@ -1,0 +1,264 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first init): the dry-run — and only the dry-run — sees 512
+placeholder host devices so `jax.make_mesh` can build the production mesh.
+
+Per cell we record:
+  * compile success,
+  * `compiled.memory_analysis()`  (per-device bytes — proves it fits),
+  * `compiled.cost_analysis()`    (FLOPs / bytes for §Roofline),
+  * collective bytes parsed from the lowered HLO (§Roofline third term),
+  * the three roofline terms + bottleneck (analysis/roofline.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all            # orchestrates subprocesses
+  python -m repro.launch.dryrun --list
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "artifacts", "dryrun")
+
+
+PROBE_LAYER_FIELD = {
+    "lm": "n_layers", "gnn": None, "recsys": None, "mwis": None,
+}
+
+
+def _probe_overrides(arch, shape):
+    """Per-family probe configs: (list of (tag, overrides, layer_count),
+    full_layer_count).  Scans are fully unrolled in probes so
+    cost_analysis counts true work; two layer counts -> linear fit."""
+    fam = arch.family
+    if fam == "lm":
+        ov = {"probe_unroll": True}
+        if shape == "prefill_32k":
+            ov["attn_chunk"] = 8192   # 4x4 attention tiles, unrolled exactly
+        if shape == "train_4k":
+            ov["attn_chunk"] = 1024   # 4x4 tiles
+        return ([("p2", dict(ov, n_layers=2), 2),
+                 ("p4", dict(ov, n_layers=4), 4)], None)
+    if fam == "gnn":
+        if arch.arch_id == "graphsage-reddit":
+            return ([("p1", {}, None)], None)  # python loops: already exact
+        field = "n_blocks" if arch.arch_id == "dimenet" else "n_layers"
+        ov = {"probe_unroll": True}
+        if arch.arch_id == "equiformer-v2":
+            ov["edge_chunk"] = 1 << 62  # single edge chunk (flops invariant)
+        return ([("p2", dict(ov, **{field: 2}), 2),
+                 ("p4", dict(ov, **{field: 4}), 4)], field)
+    if fam == "recsys":
+        return ([("p1", {}, None)], None)      # no loops: already exact
+    # mwis: loop-free single sweep-round probe
+    return ([("sweep", {"probe": True}, None)], None)
+
+
+def run_cell(arch_id: str, shape: str, mesh_kind: str,
+             xla_opts: str = "", overrides=None) -> dict:
+    import jax
+
+    from repro.analysis import hlo as hlo_mod
+    from repro.analysis import roofline as rl
+    from repro.configs import base as cbase
+    from repro.configs import registry
+    from repro.launch.mesh import make_pe_mesh, make_production_mesh
+
+    t0 = time.time()
+    arch = registry.get(arch_id)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(mesh.devices.size)
+    if arch.family == "mwis":
+        mesh = make_pe_mesh(mesh)
+    from repro.models import common as MC
+
+    MC.set_hint_mesh(mesh)
+    fsdp = cbase.fsdp_axes_for(mesh) or ("pe",)
+
+    built = arch.build(shape, mesh, fsdp, overrides) if overrides else \
+        arch.build(shape, mesh, fsdp)
+    kw = {}
+    if built.out_shardings is not None:
+        kw["out_shardings"] = built.out_shardings
+    jitted = jax.jit(built.fn, in_shardings=built.in_shardings, **kw)
+    lowered = jitted.lower(*built.abstract_inputs)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    print("memory_analysis:", mem)
+    print("cost_analysis[flops]:", cost.get("flops"),
+          "bytes:", cost.get("bytes accessed"))
+
+    text = compiled.as_text()
+    coll = hlo_mod.collective_bytes(text)
+    roof = rl.from_cell(cost, coll, built.model_flops, n_chips)
+
+    return dict(
+        arch=arch_id, shape=shape, mesh=mesh_kind, n_chips=n_chips,
+        ok=True,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=dict(
+            argument_bytes=mem.argument_size_in_bytes,
+            output_bytes=mem.output_size_in_bytes,
+            temp_bytes=mem.temp_size_in_bytes,
+            code_bytes=mem.generated_code_size_in_bytes,
+        ),
+        cost=dict(
+            flops=float(cost.get("flops", 0.0)),
+            bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+        ),
+        collectives=coll,
+        roofline=roof.report(),
+        note=built.note,
+        xla_opts=xla_opts,
+        overrides={k: str(v) for k, v in (overrides or {}).items()},
+    )
+
+
+def all_cells():
+    from repro.configs import registry
+
+    cells = []
+    for arch_id, shape, skip in registry.all_cells(include_skipped=False):
+        for mesh_kind in ("single", "multi"):
+            cells.append((arch_id, shape, mesh_kind))
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=ARTIFACTS)
+    ap.add_argument("--tag", default="", help="artifact filename suffix "
+                    "(perf-iteration variants)")
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--probe", action="store_true",
+                    help="unrolled-scan probe compiles for exact roofline")
+    ap.add_argument("--override", action="append", default=[],
+                    help="config override key=value (perf variants)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.list:
+        for c in all_cells():
+            print(*c)
+        return
+
+    if args.all:
+        cells = all_cells()
+        failures = 0
+        for arch_id, shape, mesh_kind in cells:
+            tag = f"_{args.tag}" if args.tag else ""
+            fn = os.path.join(
+                args.out, f"{arch_id}__{shape}__{mesh_kind}{tag}.json"
+            )
+            if os.path.exists(fn) and not args.force:
+                print(f"[skip] {fn}")
+                continue
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", arch_id, "--shape", shape, "--mesh", mesh_kind,
+                "--out", args.out,
+            ] + (["--tag", args.tag] if args.tag else [])
+            print(f"[cell] {arch_id} × {shape} × {mesh_kind} ...",
+                  flush=True)
+            try:
+                r = subprocess.run(
+                    cmd, capture_output=True, text=True,
+                    timeout=args.timeout,
+                )
+                if r.returncode != 0:
+                    failures += 1
+                    err = dict(arch=arch_id, shape=shape, mesh=mesh_kind,
+                               ok=False, error=r.stderr[-4000:])
+                    with open(fn, "w") as f:
+                        json.dump(err, f, indent=1)
+                    print(f"  FAILED (see {fn})")
+                else:
+                    print("  ok")
+            except subprocess.TimeoutExpired:
+                failures += 1
+                with open(fn, "w") as f:
+                    json.dump(dict(arch=arch_id, shape=shape, mesh=mesh_kind,
+                                   ok=False, error="timeout"), f)
+                print("  TIMEOUT")
+        print(f"dry-run complete; {failures} failures")
+        sys.exit(1 if failures else 0)
+
+    assert args.arch and args.shape, "--arch and --shape required"
+    cli_ov = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        try:
+            cli_ov[k] = json.loads(v)
+        except json.JSONDecodeError:
+            cli_ov[k] = v
+    if args.probe:
+        from repro.configs import registry as _reg
+
+        arch = _reg.get(args.arch)
+        probes, field = _probe_overrides(arch, args.shape)
+        for ptag, ov, layers in probes:
+            ov = dict(ov, **cli_ov)
+            if args.tag:
+                ptag = f"{ptag}_{args.tag}" 
+            fn = os.path.join(
+                args.out,
+                f"{args.arch}__{args.shape}__{args.mesh}_probe{ptag}.json",
+            )
+            if os.path.exists(fn) and not args.force:
+                print(f"[skip] {fn}")
+                continue
+            try:
+                rec = run_cell(args.arch, args.shape, args.mesh,
+                               overrides=ov)
+                rec["probe_layers"] = layers
+            except Exception:
+                traceback.print_exc()
+                rec = dict(arch=args.arch, shape=args.shape, mesh=args.mesh,
+                           ok=False, probe=ptag,
+                           error=traceback.format_exc()[-4000:])
+            with open(fn, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(f"[probe {ptag}] written {fn}")
+        return
+    tag = f"_{args.tag}" if args.tag else ""
+    fn = os.path.join(
+        args.out, f"{args.arch}__{args.shape}__{args.mesh}{tag}.json"
+    )
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh,
+                       overrides=cli_ov or None)
+    except Exception:
+        traceback.print_exc()
+        with open(fn, "w") as f:
+            json.dump(dict(arch=args.arch, shape=args.shape, mesh=args.mesh,
+                           ok=False, error=traceback.format_exc()[-4000:]),
+                      f, indent=1)
+        sys.exit(1)
+    with open(fn, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps(rec["roofline"], indent=1))
+
+
+if __name__ == "__main__":
+    main()

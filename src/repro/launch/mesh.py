@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Single pod: 16×16 = 256 chips, axes (data, model).
+Multi-pod:  2×16×16 = 512 chips, axes (pod, data, model) — the `pod` axis
+composes with data parallelism (hierarchical gradient reduction) and with
+the PE axis for MWIS/GNN graph partitioning.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_pe_mesh(base_mesh):
+    """Flatten a production mesh into a single 'pe' axis (MWIS runs)."""
+    devs = base_mesh.devices.reshape(-1)
+    return jax.sharding.Mesh(devs, ("pe",))
+
+
+def make_host_mesh(p: int):
+    """Small test mesh over host CPU devices (requires XLA_FLAGS set)."""
+    devs = np.asarray(jax.devices()[:p])
+    return jax.sharding.Mesh(devs, ("pe",))

@@ -1,0 +1,511 @@
+"""Shared model substrate: param specs, norms, RoPE, chunked attention, loss.
+
+Models are pure-JAX (no flax): parameters are nested dicts of arrays, each
+described by a :class:`ParamSpec` carrying shape, dtype, a PartitionSpec for
+the production mesh, and an initializer.  ``abstract_params`` produces the
+ShapeDtypeStruct pytree the multi-pod dry-run lowers against (no allocation);
+``init_params`` materializes small configs for CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.float32
+    pspec: P = P()
+    init: str = "normal"   # normal | zeros | ones
+    scale: float = 0.02
+
+
+ParamTree = Dict[str, Any]  # nested dict of ParamSpec / arrays
+
+
+def abstract_params(specs: ParamTree) -> ParamTree:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def sanitize_pspec(shape: Tuple[int, ...], pspec: P, mesh) -> P:
+    """Drop mesh axes from dims they don't divide (jit in_shardings require
+    exact divisibility, unlike with_sharding_constraint)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    entries = list(pspec) + [None] * (len(shape) - len(pspec))
+    out = []
+    for dim, ent in zip(shape, entries[: len(shape)]):
+        if ent is None:
+            out.append(None)
+            continue
+        axes = ent if isinstance(ent, tuple) else (ent,)
+        axes = tuple(a for a in axes if a in sizes)
+        # greedily keep the prefix of axes whose product divides the dim
+        kept = []
+        prod = 1
+        for a in axes:
+            if dim % (prod * sizes[a]) == 0:
+                kept.append(a)
+                prod *= sizes[a]
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(tuple(kept))
+    return P(*out)
+
+
+def param_shardings(specs: ParamTree, mesh) -> ParamTree:
+    from jax.sharding import NamedSharding
+
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, sanitize_pspec(s.shape, s.pspec, mesh)),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def init_params(specs: ParamTree, key: jax.Array) -> ParamTree:
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+
+    def one(s: ParamSpec, k):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, s.dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, s.dtype)
+        return (jax.random.normal(k, s.shape, jnp.float32) * s.scale).astype(
+            s.dtype
+        )
+
+    return jax.tree.unflatten(treedef, [one(s, k) for s, k in zip(leaves, keys)])
+
+
+def count_params(specs: ParamTree) -> int:
+    leaves = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    return sum(int(math.prod(s.shape)) for s in leaves)
+
+
+# --------------------------------------------------------------------- #
+# activation-sharding hints (GSPMD constraints; no-op without a mesh)
+# --------------------------------------------------------------------- #
+_HINT_MESH = None
+
+
+def set_hint_mesh(mesh) -> None:
+    """Install the mesh used by shard_hint (dry-run / production jit)."""
+    global _HINT_MESH
+    _HINT_MESH = mesh
+
+
+def hint_axis_size(name: str):
+    """Size of a mesh axis under the installed hint mesh (None if no mesh)."""
+    if _HINT_MESH is None:
+        return None
+    return dict(
+        zip(_HINT_MESH.axis_names, _HINT_MESH.devices.shape)
+    ).get(name)
+
+
+def shard_hint(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint with 'fsdp' placeholder resolution and
+    divisibility sanitation; identity when no mesh is installed (CPU smoke
+    tests)."""
+    if _HINT_MESH is None:
+        return x
+    from jax.sharding import NamedSharding
+
+    names = _HINT_MESH.axis_names
+    fsdp = tuple(a for a in names if a in ("pod", "data"))
+    resolved = []
+    for ent in spec:
+        if ent == "fsdp":
+            resolved.append(fsdp)
+        elif ent == "all":
+            resolved.append(tuple(names))
+        else:
+            resolved.append(ent)
+    p = sanitize_pspec(x.shape, P(*resolved), _HINT_MESH)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_HINT_MESH, p))
+
+
+# --------------------------------------------------------------------- #
+# numerics
+# --------------------------------------------------------------------- #
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: [..., T, H, Dh]; positions: [..., T]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("btd,df->btf", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("btd,df->btf", x, w_up.astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("btf,fd->btd", h, w_down.astype(x.dtype))
+
+
+# --------------------------------------------------------------------- #
+# attention — chunked online-softmax (flash-style, pure jnp) + decode
+# --------------------------------------------------------------------- #
+NEG_INF = -1e30
+
+
+def chunked_attention(
+    q: jax.Array,            # [B, T, H, Dh]
+    k: jax.Array,            # [B, S, Hkv, Dh]
+    v: jax.Array,            # [B, S, Hkv, Dh]
+    *,
+    causal: bool = True,
+    window: Optional[jax.Array] = None,  # sliding window (tokens), None = full
+    q_offset: int = 0,       # absolute position of q[0]
+    chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style attention, doubly tiled: outer scan over q blocks, inner
+    scan over KV blocks with running (max, denom).  The live tile is
+    [B, qc, H, kc] — never the [T, S] score matrix.  GQA via head-group
+    broadcasting.  This is the jnp oracle for a fused Pallas attention
+    kernel on real TPUs (masked causal blocks are computed-and-discarded;
+    block skipping is a kernel-level optimisation)."""
+    B, T, H, Dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    qc = min(chunk, T)
+    kc_sz = min(chunk, S)
+    nq = (T + qc - 1) // qc
+    nk = (S + kc_sz - 1) // kc_sz
+    qpad, kpad = nq * qc - T, nk * kc_sz - S
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    qb = (q.reshape(B, nq, qc, Hkv, rep, Dh) * scale).astype(jnp.float32)
+    kb = k.reshape(B, nk, kc_sz, Hkv, Dh)
+    vb = v.reshape(B, nk, kc_sz, Hkv, Dh)
+
+    def q_block(_, qin):
+        qi, iq = qin                      # [B, qc, Hkv, rep, Dh], scalar
+        q_pos = q_offset + iq * qc + jnp.arange(qc)
+
+        def kv_block(carry, kin):
+            m, l, acc = carry
+            ki, vi, ik = kin
+            key_pos = ik * kc_sz + jnp.arange(kc_sz)
+            s = jnp.einsum(
+                "bqgrd,bcgd->bqgrc", qi, ki.astype(jnp.float32)
+            )  # [B, qc, Hkv, rep, kc]
+            mask = jnp.ones((qc, kc_sz), bool)
+            if causal:
+                mask &= q_pos[:, None] >= key_pos[None, :]
+            if window is not None:
+                mask &= q_pos[:, None] - key_pos[None, :] < window
+            mask &= (key_pos < S)[None, :]
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            pexp = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + pexp.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bqgrc,bcgd->bqgrd", pexp, vi.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, qc, Hkv, rep), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, qc, Hkv, rep), jnp.float32)
+        acc0 = jnp.zeros((B, qc, Hkv, rep, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, acc0),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1), jnp.arange(nk)),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out
+
+    _, blocks = jax.lax.scan(
+        q_block, None, (qb.swapaxes(0, 1), jnp.arange(nq))
+    )  # [nq, B, qc, Hkv, rep, Dh]
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * qc, H, Dh)
+    return out[:, :T].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,        # [B, 1, H, Dh]
+    k_cache: jax.Array,  # [B, S, Hkv, Dh]
+    v_cache: jax.Array,  # [B, S, Hkv, Dh]
+    cache_len: jax.Array | int,   # number of valid cache positions
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """One-token attention against a full KV cache (serve_step hot path)."""
+    B, _, H, Dh = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = H // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    qh = (q.reshape(B, Hkv, rep, Dh) * scale).astype(jnp.float32)
+    s = jnp.einsum("bgrd,bsgd->bgrs", qh, k_cache.astype(jnp.float32))
+    pos = jnp.arange(S)
+    mask = pos[None, :] < cache_len
+    if window is not None:
+        mask &= pos[None, :] >= cache_len - window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- #
+# flash attention with custom VJP (memory-bounded fwd AND bwd)
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class AttnOpts:
+    causal: bool = True
+    chunk: int = 512
+    q_offset: int = 0
+    unroll: int = 1   # scan unroll for roofline probes
+
+
+def flash_attention(q, k, v, window=None, *, causal=True, chunk=512,
+                    q_offset=0, unroll=1):
+    """Differentiable flash attention.  Forward = online-softmax double
+    tiling; backward = the FlashAttention recompute scheme via custom_vjp,
+    saving only (q, k, v, out, lse) — O(T) residuals instead of the
+    O(T²/chunk) scan residuals a naive autodiff of the tiled forward keeps.
+    `window` may be a traced scalar (dynamic local:global interleave)."""
+    if window is None:
+        window = jnp.asarray(2**30, jnp.int32)
+    opts = AttnOpts(causal=causal, chunk=chunk, q_offset=q_offset,
+                    unroll=unroll)
+    return _flash(q, k, v, window, opts)
+
+
+def _blockify(q, k, v, chunk):
+    B, T, H, Dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    qc, kc = min(chunk, T), min(chunk, S)
+    nq, nk = (T + qc - 1) // qc, (S + kc - 1) // kc
+    qpad, kpad = nq * qc - T, nk * kc - S
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    rep = H // Hkv
+    qb = q.reshape(B, nq, qc, Hkv, rep, Dh)
+    kb = k.reshape(B, nk, kc, Hkv, Dh)
+    vb = v.reshape(B, nk, kc, Hkv, Dh)
+    return qb, kb, vb, (B, T, S, H, Hkv, rep, Dh, qc, kc, nq, nk)
+
+
+def _mask_penalty(q_pos, key_pos, S, window, causal):
+    """Additive f32 penalty [qc, kc] (0 = keep, NEG_INF = mask).  Arithmetic
+    masking keeps the masked-softmax a fused broadcast-add: a boolean mask
+    `where`'d against the [B, qc, H, kc] score tile gets materialized at
+    full tile shape by XLA (gigabytes); the [qc, kc] penalty does not."""
+    m = (key_pos < S)[None, :]
+    if causal:
+        m = m & (q_pos[:, None] >= key_pos[None, :])
+    m = m & (q_pos[:, None] - key_pos[None, :] < window)
+    return jnp.where(m, 0.0, NEG_INF).astype(jnp.float32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _flash(q, k, v, window, opts: "AttnOpts"):
+    out, _ = _flash_fwd_impl(q, k, v, window, opts)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, window, opts: "AttnOpts"):
+    qb, kb, vb, dims = _blockify(q, k, v, opts.chunk)
+    B, T, S, H, Hkv, rep, Dh, qc, kc, nq, nk = dims
+    scale = 1.0 / math.sqrt(Dh)
+    qb = (qb * scale).astype(jnp.float32)
+
+    def q_block(_, qin):
+        qi, iq = qin
+        q_pos = opts.q_offset + iq * qc + jnp.arange(qc)
+
+        def kv_block(carry, kin):
+            m, l, acc = carry
+            ki, vi, ik = kin
+            key_pos = ik * kc + jnp.arange(kc)
+            s = jnp.einsum("bqgrd,bcgd->bqgrc", qi, ki.astype(jnp.float32))
+            pen = _mask_penalty(q_pos, key_pos, S, window, opts.causal)
+            s = s + pen[None, :, None, None, :]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            pexp = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + pexp.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bqgrc,bcgd->bqgrd", pexp, vi.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, qc, Hkv, rep), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, qc, Hkv, rep), jnp.float32)
+        acc0 = jnp.zeros((B, qc, Hkv, rep, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, acc0),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1), jnp.arange(nk)),
+            unroll=opts.unroll,
+        )
+        o = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (o, lse)
+
+    _, (blocks, lses) = jax.lax.scan(
+        q_block, None, (qb.swapaxes(0, 1), jnp.arange(nq)),
+        unroll=opts.unroll,
+    )
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * qc, H, Dh)
+    out = out[:, :T].astype(q.dtype)
+    lse = lses.transpose(1, 0, 2, 3, 4).reshape(B, nq * qc, Hkv, rep)[:, :T]
+    return out, lse
+
+
+def _flash_fwd(q, k, v, window, opts: "AttnOpts"):
+    out, lse = _flash_fwd_impl(q, k, v, window, opts)
+    return out, (q, k, v, window, out, lse)
+
+
+def _flash_bwd(opts: "AttnOpts", res, dout):
+    q, k, v, window, out, lse = res
+    qb, kb, vb, dims = _blockify(q, k, v, opts.chunk)
+    B, T, S, H, Hkv, rep, Dh, qc, kc, nq, nk = dims
+    scale = 1.0 / math.sqrt(Dh)
+    qb = (qb * scale).astype(jnp.float32)
+    pad_t = nq * qc - T
+
+    def padT(x):
+        return jnp.pad(x, ((0, 0), (0, pad_t)) + ((0, 0),) * (x.ndim - 2)) \
+            if pad_t else x
+
+    dob = padT(dout.astype(jnp.float32)).reshape(B, nq, qc, Hkv, rep, Dh)
+    lseb = padT(lse).reshape(B, nq, qc, Hkv, rep)
+    # D_i = rowsum(dO ∘ O)
+    Dfull = padT((dout.astype(jnp.float32) * out.astype(jnp.float32)).sum(-1)
+                 .reshape(B, T, Hkv, rep))
+    Db = Dfull.reshape(B, nq, qc, Hkv, rep)
+
+    def probs(qi, ki, iq, ik):
+        q_pos = opts.q_offset + iq * qc + jnp.arange(qc)
+        key_pos = ik * kc + jnp.arange(kc)
+        s = jnp.einsum("bqgrd,bcgd->bqgrc", qi, ki.astype(jnp.float32))
+        pen = _mask_penalty(q_pos, key_pos, S, window, opts.causal)
+        return s + pen[None, :, None, None, :]
+
+    # Fused single pass (FlashAttention-2 style): outer scan over KV blocks
+    # carrying the full blocked dQ accumulator; dK/dV emitted per KV block.
+    # One [T, H, Dh] f32 dq buffer total and each (q, kv) tile's P matrix is
+    # computed exactly once in the backward.
+    def kv_block(dq_all, kin):
+        ki, vi, ik = kin
+
+        def q_block(carry, qin):
+            dk, dv, = carry
+            qi, doi, lsei, Di, dqi, iq = qin
+            s = probs(qi, ki, iq, ik)
+            p = jnp.exp(s - lsei[..., None])
+            dv = dv + jnp.einsum("bqgrc,bqgrd->bcgd", p, doi)
+            dp = jnp.einsum("bqgrd,bcgd->bqgrc", doi, vi.astype(jnp.float32))
+            ds = p * (dp - Di[..., None])
+            dk = dk + jnp.einsum("bqgrc,bqgrd->bcgd", ds, qi)
+            dqi = dqi + jnp.einsum("bqgrc,bcgd->bqgrd", ds,
+                                   ki.astype(jnp.float32))
+            return (dk, dv), dqi
+
+        dk0 = jnp.zeros((B, kc, Hkv, Dh), jnp.float32)
+        dv0 = jnp.zeros((B, kc, Hkv, Dh), jnp.float32)
+        (dk, dv), dq_all = jax.lax.scan(
+            q_block, (dk0, dv0),
+            (qb.swapaxes(0, 1), dob.swapaxes(0, 1), lseb.swapaxes(0, 1),
+             Db.swapaxes(0, 1), dq_all, jnp.arange(nq)),
+            unroll=opts.unroll,
+        )
+        return dq_all, (dk, dv)
+
+    dq0 = jnp.zeros((nq, B, qc, Hkv, rep, Dh), jnp.float32)
+    dqb, (dkb, dvb) = jax.lax.scan(
+        kv_block, dq0,
+        (kb.swapaxes(0, 1), vb.swapaxes(0, 1), jnp.arange(nk)),
+        unroll=opts.unroll,
+    )
+    dq = dqb.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * qc, H, Dh)[:, :T]
+    dq = (dq * scale).astype(q.dtype)
+    dk = dkb.transpose(1, 0, 2, 3, 4).reshape(B, nk * kc, Hkv, Dh)[:, :S]
+    dv = dvb.transpose(1, 0, 2, 3, 4).reshape(B, nk * kc, Hkv, Dh)[:, :S]
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype), None
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+# --------------------------------------------------------------------- #
+# loss — chunked softmax cross-entropy (never materializes [T, vocab])
+# --------------------------------------------------------------------- #
+def chunked_xent(
+    h: jax.Array,          # [B, T, D] final hidden states
+    emb: jax.Array,        # [V, D] (tied LM head)
+    labels: jax.Array,     # [B, T] int32
+    *,
+    n_chunks: int = 8,
+    unroll: int = 1,
+) -> jax.Array:
+    B, T, D = h.shape
+    assert T % n_chunks == 0, "seq len must divide loss chunks"
+    hc = h.reshape(B, n_chunks, T // n_chunks, D).swapaxes(0, 1)
+    lc = labels.reshape(B, n_chunks, T // n_chunks).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_loss(hx, lx):
+        # rematerialized in bwd: the [chunk, vocab] logits/probs are never
+        # saved — O(T·V) residuals would dominate HBM otherwise
+        logits = jnp.einsum(
+            "btd,vd->btv", hx.astype(jnp.float32), emb.astype(jnp.float32)
+        )
+        logits = shard_hint(logits, "fsdp", None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, lx[..., None].astype(jnp.int32), axis=-1
+        )[..., 0]
+        return (lse - gold).sum()
+
+    def body(tot, inp):
+        hx, lx = inp
+        return tot + chunk_loss(hx, lx), None
+
+    tot, _ = jax.lax.scan(
+        body, jnp.zeros((), jnp.float32), (hc, lc), unroll=unroll
+    )
+    return tot / (B * T)

@@ -1,0 +1,137 @@
+"""DLRM (Naumov et al. [arXiv:1906.00091]) — MLPerf benchmark config.
+
+  dense features → bottom MLP ┐
+                              ├ dot-interaction → top MLP → CTR logit
+  26 sparse features → E-bags ┘
+
+JAX has no nn.EmbeddingBag: lookups are ``jnp.take`` + (for multi-hot bags)
+``segment_sum`` — implemented here and accelerated by the `embedding_bag`
+Pallas kernel on TPU.  Tables are row-sharded over the `model` axis (the
+classic hybrid-parallel DLRM schedule: data-parallel MLPs, model-parallel
+embeddings; GSPMD materializes the index/vector all_to_all).
+
+The `retrieval_cand` shape scores one query against 10⁶ candidates as a
+single batched matmul — no loops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamSpec
+
+
+# MLPerf DLRM (Criteo 1TB) per-feature vocabulary sizes.
+MLPERF_VOCABS = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 128
+    bot_mlp: Tuple[int, ...] = (13, 512, 256, 128)
+    top_mlp: Tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    vocabs: Tuple[int, ...] = MLPERF_VOCABS
+    interaction: str = "dot"
+    dtype: Any = jnp.float32
+
+    @property
+    def n_interactions(self) -> int:
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2
+
+    @property
+    def top_in(self) -> int:
+        return self.embed_dim + self.n_interactions
+
+
+def param_specs(cfg: DLRMConfig, fsdp=("data",)) -> Dict[str, Any]:
+    S = ParamSpec
+    specs: Dict[str, Any] = {"tables": {}}
+    for i, v in enumerate(cfg.vocabs):
+        # row-shard big tables over every mesh axis (10⁸-row tables exceed
+        # one chip's HBM even model-sharded); tiny tables replicate.
+        # Rows pad to a shardable multiple (extra rows are never indexed).
+        if v >= 4096:
+            pspec = P(("model",) + tuple(fsdp), None)
+            v = ((v + 511) // 512) * 512
+        else:
+            pspec = P(None, None)
+        specs["tables"][f"t{i}"] = S((v, cfg.embed_dim), cfg.dtype, pspec,
+                                     scale=1.0 / cfg.embed_dim)
+    for j, (a, b) in enumerate(zip(cfg.bot_mlp[:-1], cfg.bot_mlp[1:])):
+        specs[f"bot_w{j}"] = S((a, b), cfg.dtype, P(None, None))
+        specs[f"bot_b{j}"] = S((b,), cfg.dtype, P(None), init="zeros")
+    # top_mlp entries are all layer widths; input = bottom-out ++ interactions
+    dims = (cfg.top_in,) + cfg.top_mlp
+    for j, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        specs[f"top_w{j}"] = S((a, b), cfg.dtype, P(None, None))
+        specs[f"top_b{j}"] = S((b,), cfg.dtype, P(None), init="zeros")
+    return specs
+
+
+def embedding_bag(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """Single-hot bag == gather; [B] → [B, dim].  (Multi-hot variant:
+    gather + segment_sum — see kernels/embedding_bag for the fused form.)"""
+    return jnp.take(table, idx, axis=0)
+
+
+def _mlp(params, prefix, x, n):
+    for j in range(n):
+        x = x @ params[f"{prefix}_w{j}"] + params[f"{prefix}_b{j}"]
+        if j < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def forward(params, batch, cfg: DLRMConfig) -> jax.Array:
+    """batch: dense [B, 13] f32, sparse [B, 26] int32 → logits [B]."""
+    dense, sparse = batch["dense"], batch["sparse"]
+    B = dense.shape[0]
+    d = _mlp(params, "bot", dense.astype(cfg.dtype), len(cfg.bot_mlp) - 1)
+    d = jax.nn.relu(d)                                    # [B, dim]
+    embs = [
+        embedding_bag(params["tables"][f"t{i}"], sparse[:, i])
+        for i in range(cfg.n_sparse)
+    ]
+    feats = jnp.stack([d] + embs, axis=1)                 # [B, F, dim]
+    z = jnp.einsum("bfd,bgd->bfg", feats, feats)          # dot interaction
+    iu = jnp.triu_indices(feats.shape[1], k=1)
+    inter = z[:, iu[0], iu[1]]                            # [B, F(F-1)/2]
+    top_in = jnp.concatenate([d, inter], axis=-1)
+    logit = _mlp(params, "top", top_in, len(cfg.top_mlp))
+    return logit[:, 0]
+
+
+def loss_fn(params, batch, cfg: DLRMConfig) -> jax.Array:
+    logit = forward(params, batch, cfg)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+    )
+
+
+def serve_step(params, batch, cfg: DLRMConfig) -> jax.Array:
+    return jax.nn.sigmoid(forward(params, batch, cfg))
+
+
+def retrieval_step(params, batch, cfg: DLRMConfig) -> jax.Array:
+    """Score 1 query against n_candidates: candidate item embeddings come
+    from table 0 rows (the big item table); one batched matvec."""
+    q_dense = batch["dense"]                      # [1, 13]
+    d = _mlp(params, "bot", q_dense.astype(cfg.dtype), len(cfg.bot_mlp) - 1)
+    d = jax.nn.relu(d)                            # [1, dim]
+    cand = embedding_bag(params["tables"]["t0"], batch["candidates"][0])
+    scores = (cand @ d[0]) / jnp.sqrt(jnp.float32(cfg.embed_dim))
+    return scores                                  # [n_candidates]

@@ -1,0 +1,125 @@
+"""DimeNet (Gasteiger et al. [arXiv:2003.03123]) — directional message
+passing over edge messages with a triplet (angular) interaction.
+
+Kernel regime: triplet gather — messages live on *edges*; each interaction
+block aggregates over wedges (k→j→i) with a radial×angular basis and a
+bilinear contraction (n_bilinear=8 down-projection as in DimeNet++).
+
+TPU adaptation (DESIGN.md §5): the triplet set is capped at a static budget
+``n_triplets`` (full Σ deg² enumeration is intractable for the 100M-edge
+assigned shapes); triplets are sampled/truncated per in-edge, the standard
+batched-angular-GNN practice.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamSpec
+from repro.models.gnn import common as G
+
+
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str = "dimenet"
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    d_feat: int = 16          # species/feature input dim (projected in)
+    cutoff: float = 5.0
+    dtype: Any = jnp.float32
+    probe_unroll: bool = False
+
+
+def param_specs(cfg: DimeNetConfig, fsdp=("data",)) -> Dict[str, Any]:
+    S = ParamSpec
+    d, nb = cfg.d_hidden, cfg.n_blocks
+    nsr = cfg.n_spherical * cfg.n_radial
+    return {
+        "embed_node": S((cfg.d_feat, d), cfg.dtype, P(None, "model")),
+        "embed_rbf": S((cfg.n_radial, d), cfg.dtype, P(None, None)),
+        "embed_msg": S((3 * d, d), cfg.dtype, P(None, "model")),
+        "blocks": {
+            "w_msg": S((nb, d, d), cfg.dtype, P(None, None, "model")),
+            "w_down": S((nb, d, cfg.n_bilinear), cfg.dtype, P(None, None, None)),
+            "w_sbf": S((nb, nsr, cfg.n_bilinear), cfg.dtype, P(None, None, None)),
+            "w_up": S((nb, cfg.n_bilinear, d), cfg.dtype, P(None, None, "model")),
+            "w_rbf_gate": S((nb, cfg.n_radial, d), cfg.dtype, P(None, None, None)),
+            "w_out1": S((nb, d, d), cfg.dtype, P(None, "model", None)),
+            "w_out2": S((nb, d, d), cfg.dtype, P(None, None, "model")),
+        },
+        "head_w1": S((d, d), cfg.dtype, P(None, "model")),
+        "head_w2": S((d, 1), cfg.dtype, P("model", None)),
+    }
+
+
+def forward(params, batch, cfg: DimeNetConfig) -> jax.Array:
+    """batch: pos [N,3], node_feat [N,F], row/col [E] (sentinel pads),
+    triplets [T, 2] = (in-edge k→j, out-edge j→i), batch_id [N] → energies
+    per graph [n_graphs]."""
+    n = batch["node_feat"].shape[0]
+    row, col = batch["row"], batch["col"]
+    E = row.shape[0]
+    emask = row < n
+    posp = jnp.concatenate([batch["pos"], jnp.zeros((1, 3), cfg.dtype)])
+    vec = posp[col] - posp[row]
+    dist = jnp.linalg.norm(vec + (~emask[:, None]) * 1.0, axis=-1)
+    dirs = vec / jnp.maximum(dist[:, None], 1e-6)
+    rbf = G.radial_basis(dist, cfg.n_radial, cfg.cutoff) * emask[:, None]
+
+    h = batch["node_feat"].astype(cfg.dtype) @ params["embed_node"]
+    hp = jnp.concatenate([h, jnp.zeros((1, cfg.d_hidden), h.dtype)])
+    m = jax.nn.silu(
+        jnp.concatenate(
+            [hp[row], hp[col], rbf @ params["embed_rbf"]], axis=-1
+        ) @ params["embed_msg"]
+    ) * emask[:, None]
+
+    # triplet geometry: angle between in-edge and out-edge directions
+    t_in, t_out = batch["triplets"][:, 0], batch["triplets"][:, 1]
+    tmask = (t_in < E) & (t_out < E)
+    ti = jnp.minimum(t_in, E - 1)
+    to = jnp.minimum(t_out, E - 1)
+    cos_a = (-dirs[ti] * dirs[to]).sum(-1).clip(-1.0, 1.0)
+    angle = jnp.arccos(cos_a)
+    sbf = (
+        G.angular_basis(angle, cfg.n_spherical)[:, :, None]
+        * G.radial_basis(dist[ti], cfg.n_radial, cfg.cutoff)[:, None, :]
+    ).reshape(-1, cfg.n_spherical * cfg.n_radial) * tmask[:, None]
+
+    node_out = jnp.zeros((n, cfg.d_hidden), cfg.dtype)
+
+    def block(carry, bp):
+        m, node_out = carry
+        # bilinear triplet interaction (DimeNet++ down/up projection)
+        m_in = (m[ti] @ bp["w_down"])                       # [T, nbil]
+        tmsg = m_in * (sbf @ bp["w_sbf"])                   # [T, nbil]
+        agg = G.scatter_sum(
+            jnp.where(tmask[:, None], tmsg, 0), to, E
+        ) @ bp["w_up"]                                      # [E, d]
+        m_new = jax.nn.silu(m @ bp["w_msg"] + agg) * emask[:, None]
+        m = m + m_new
+        gate = rbf @ bp["w_rbf_gate"]                       # [E, d]
+        contrib = G.scatter_sum(m * gate, col, n)
+        node_out = node_out + jax.nn.silu(contrib @ bp["w_out1"]) @ bp["w_out2"]
+        return (m, node_out), None
+
+    (m, node_out), _ = jax.lax.scan(
+        block, (m, node_out), params["blocks"],
+        unroll=cfg.n_blocks if cfg.probe_unroll else 1,
+    )
+    per_node = jax.nn.silu(node_out @ params["head_w1"]) @ params["head_w2"]
+    energies = G.scatter_sum(per_node, batch["batch_id"], batch["n_graphs"])
+    return energies[:, 0]
+
+
+def loss_fn(params, batch, cfg: DimeNetConfig) -> jax.Array:
+    e = forward(params, batch, cfg)
+    return jnp.mean((e - batch["energy"]) ** 2)

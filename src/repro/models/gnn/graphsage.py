@@ -1,0 +1,68 @@
+"""GraphSAGE (Hamilton et al. [arXiv:1706.02216]) — mean aggregator,
+2 layers, fanout sampling (25-10 for the Reddit config).
+
+    h'_v = ReLU( W_self h_v + W_nbr · mean_{u∈sample(N(v))} h_u )
+
+The sampled-training shape (`minibatch_lg`) consumes subgraphs produced by
+:mod:`repro.graphs.sampler`; full-batch shapes pass the whole edge list.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamSpec
+from repro.models.gnn import common as G
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphSAGEConfig:
+    name: str = "graphsage-reddit"
+    n_layers: int = 2
+    d_hidden: int = 128
+    d_feat: int = 602
+    n_classes: int = 41
+    sample_sizes: tuple = (25, 10)
+    dtype: Any = jnp.float32
+
+
+def param_specs(cfg: GraphSAGEConfig, fsdp=("data",)) -> Dict[str, Any]:
+    S = ParamSpec
+    specs: Dict[str, Any] = {}
+    d_in = cfg.d_feat
+    for i in range(cfg.n_layers):
+        d_out = cfg.d_hidden
+        specs[f"l{i}_self"] = S((d_in, d_out), cfg.dtype, P(None, "model"))
+        specs[f"l{i}_nbr"] = S((d_in, d_out), cfg.dtype, P(None, "model"))
+        specs[f"l{i}_b"] = S((d_out,), cfg.dtype, P(None), init="zeros")
+        d_in = d_out
+    specs["out_w"] = S((d_in, cfg.n_classes), cfg.dtype, P("model", None))
+    specs["out_b"] = S((cfg.n_classes,), cfg.dtype, P(None), init="zeros")
+    return specs
+
+
+def forward(params, batch, cfg: GraphSAGEConfig) -> jax.Array:
+    n = batch["node_feat"].shape[0]
+    row, col = batch["row"], batch["col"]
+    emask = row < n
+    h = batch["node_feat"].astype(cfg.dtype)
+    for i in range(cfg.n_layers):
+        hp = jnp.concatenate([h, jnp.zeros((1, h.shape[1]), h.dtype)])
+        agg = G.scatter_mean(hp[row], col, n, mask=emask)
+        h = jax.nn.relu(
+            h @ params[f"l{i}_self"] + agg @ params[f"l{i}_nbr"]
+            + params[f"l{i}_b"]
+        )
+        # L2 normalisation as in the paper
+        h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+    return h @ params["out_w"] + params["out_b"]
+
+
+def loss_fn(params, batch, cfg: GraphSAGEConfig) -> jax.Array:
+    logits = forward(params, batch, cfg)
+    return G.node_xent_loss(logits, batch["labels"], batch["label_mask"])

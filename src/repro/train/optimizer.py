@@ -1,0 +1,153 @@
+"""Optimizers: AdamW (default) and Adafactor (memory-lean for the biggest
+archs).  Pure pytree transforms; optimizer state inherits parameter
+shardings under pjit (ZeRO-style: 2D-sharded params ⇒ 2D-sharded moments).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(
+    grads: Any, state: AdamWState, params: Any, cfg: AdamWConfig
+) -> Tuple[Any, AdamWState]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - cfg.lr * delta
+        return p2.astype(p.dtype), m2, v2
+
+    flat_p, td = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree.unflatten(td, [o[0] for o in out])
+    new_m = jax.tree.unflatten(td, [o[1] for o in out])
+    new_v = jax.tree.unflatten(td, [o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v)
+
+
+# --------------------------------------------------------------------- #
+# Adafactor (factored second moment — O(n+m) state for [n, m] weights)
+# --------------------------------------------------------------------- #
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any   # row statistics (or full v for <2D params)
+    vc: Any   # col statistics (zeros for <2D params)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-4
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+
+
+def adafactor_init(params: Any) -> AdafactorState:
+    def rows(p):
+        if p.ndim >= 2:
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def cols(p):
+        if p.ndim >= 2:
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,), jnp.float32)
+
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        vr=jax.tree.map(rows, params),
+        vc=jax.tree.map(cols, params),
+    )
+
+
+def adafactor_update(
+    grads: Any, state: AdafactorState, params: Any, cfg: AdafactorConfig
+) -> Tuple[Any, AdafactorState]:
+    step = state.step + 1
+    beta = 1.0 - step.astype(jnp.float32) ** (-cfg.decay)
+
+    def upd(g, vr, vc, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + cfg.eps
+        if p.ndim >= 2:
+            vr2 = beta * vr + (1 - beta) * g2.mean(axis=-1)
+            vc2 = beta * vc + (1 - beta) * g2.mean(axis=-2)
+            denom = (
+                vr2[..., :, None] * vc2[..., None, :]
+                / jnp.maximum(vr2.mean(axis=-1)[..., None, None], cfg.eps)
+            )
+            u = g * jax.lax.rsqrt(jnp.maximum(denom, cfg.eps))
+        else:
+            vr2 = beta * vr + (1 - beta) * g2
+            vc2 = vc
+            u = g * jax.lax.rsqrt(jnp.maximum(vr2, cfg.eps))
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        p2 = p.astype(jnp.float32) - cfg.lr * u
+        return p2.astype(p.dtype), vr2, vc2
+
+    flat_p, td = jax.tree.flatten(params)
+    out = [
+        upd(g, vr, vc, p)
+        for g, vr, vc, p in zip(
+            jax.tree.leaves(grads), jax.tree.leaves(state.vr),
+            jax.tree.leaves(state.vc), flat_p,
+        )
+    ]
+    new_p = jax.tree.unflatten(td, [o[0] for o in out])
+    new_vr = jax.tree.unflatten(td, [o[1] for o in out])
+    new_vc = jax.tree.unflatten(td, [o[2] for o in out])
+    return new_p, AdafactorState(step=step, vr=new_vr, vc=new_vc)
+
+
+OPTIMIZERS: Dict[str, Tuple[Callable, Callable, Any]] = {
+    "adamw": (adamw_init, adamw_update, AdamWConfig()),
+    "adafactor": (adafactor_init, adafactor_update, AdafactorConfig()),
+}

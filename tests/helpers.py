@@ -1,0 +1,52 @@
+"""Shared test utilities."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import rules as R
+from repro.core.bitset_mwis import mwis_exact
+from repro.core.graph import Graph, from_edge_list
+
+# uniform shape buckets → one jit compilation per (p, mode) across all cases
+SMALL_PAD = dict(L=8, G=14, E=220, B=8, S=8)
+MED_PAD = dict(L=40, G=60, E=700, B=40, S=40)
+
+
+def residual_exact_weight(g: Graph, pg, state, prob) -> tuple[int, bool]:
+    """Brute-force the reduced kernel, reconstruct, return (weight, indep)."""
+    import jax.numpy as jnp
+
+    from repro.core import distributed as D
+
+    status = np.asarray(state.status)
+    w = np.asarray(state.w)
+    is_local = np.asarray(prob.is_local)
+    gids = np.asarray(prob.aux.gid)
+    alive = [i for i in range(status.shape[0]) if status[i] == 0 and is_local[i]]
+    alive_g = sorted(set(int(gids[i]) for i in alive))
+    remap = {gg: k for k, gg in enumerate(alive_g)}
+    edges = set()
+    row = np.asarray(prob.aux.row)
+    col = np.asarray(prob.aux.col)
+    for e in range(row.shape[0]):
+        r, c = int(row[e]), int(col[e])
+        if r >= gids.shape[0] or gids[r] < 0 or gids[c] < 0:
+            continue
+        if status[r] == 0 and status[c] == 0 and is_local[r]:
+            a, b = int(gids[r]), int(gids[c])
+            if a in remap and b in remap:
+                edges.add((min(remap[a], remap[b]), max(remap[a], remap[b])))
+    wts = np.zeros(len(alive_g), dtype=np.int64)
+    for i in alive:
+        wts[remap[int(gids[i])]] = w[i]
+    sub = from_edge_list(len(alive_g), list(edges), wts)
+    _, msub = mwis_exact(sub)
+    status2 = status.copy()
+    for i in range(status.shape[0]):
+        gg = int(gids[i])
+        if status[i] == 0 and gg in remap:
+            status2[i] = R.INCLUDED if msub[remap[gg]] else R.EXCLUDED
+    st2 = state._replace(status=jnp.asarray(status2))
+    members = D.members_global(pg, st2, prob.aux)
+    return g.set_weight(members), g.is_independent_set(members)

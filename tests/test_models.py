@@ -1,0 +1,116 @@
+"""Model substrate: flash attention (fwd+bwd), chunked loss, arch smokes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import common as C
+
+
+def naive_attention(q, k, v, causal=True, window=None):
+    B, T, H, Dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    qs = q.reshape(B, T, Hkv, rep, Dh) / np.sqrt(Dh)
+    s = jnp.einsum(
+        "btgrd,bsgd->btgrs", qs.astype(jnp.float32), k.astype(jnp.float32)
+    )
+    qpos, kpos = jnp.arange(T), jnp.arange(S)
+    m = jnp.ones((T, S), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        m &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(m[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("btgrs,bsgd->btgrd", p, v.astype(jnp.float32))
+    return o.reshape(B, T, H, Dh)
+
+
+@pytest.mark.parametrize("B,T,H,Hkv,Dh,chunk,window", [
+    (2, 37, 4, 2, 8, 16, None),
+    (1, 64, 4, 1, 16, 16, 9),
+    (2, 33, 2, 2, 8, 8, None),
+    (1, 100, 8, 4, 4, 32, 25),
+])
+def test_flash_attention_fwd_and_grads(B, T, H, Hkv, Dh, chunk, window):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, T, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, Hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, Hkv, Dh)), jnp.float32)
+    w = None if window is None else jnp.asarray(window)
+    ref = naive_attention(q, k, v, window=window)
+    out = C.flash_attention(q, k, v, w, chunk=chunk)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5
+    )
+    gr = jax.grad(
+        lambda *a: (naive_attention(*a, window=window) ** 2).sum(),
+        argnums=(0, 1, 2),
+    )(q, k, v)
+    gf = jax.grad(
+        lambda *a: (C.flash_attention(*a, w, chunk=chunk)
+                    .astype(jnp.float32) ** 2).sum(),
+        argnums=(0, 1, 2),
+    )(q, k, v)
+    for a, b in zip(gr, gf):
+        np.testing.assert_allclose(
+            np.asarray(b), np.asarray(a), rtol=3e-4, atol=3e-4
+        )
+
+
+def test_chunked_attention_oracle_agrees():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(2, 40, 4, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 40, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 40, 2, 8)), jnp.float32)
+    a = C.chunked_attention(q, k, v, chunk=16)
+    b = C.flash_attention(q, k, v, chunk=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_chunked_xent_matches_direct():
+    rng = np.random.default_rng(2)
+    B, T, D, V = 2, 16, 8, 50
+    h = jnp.asarray(rng.normal(size=(B, T, D)), jnp.float32)
+    emb = jnp.asarray(rng.normal(size=(V, D)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, V, size=(B, T)), jnp.int32)
+    got = C.chunked_xent(h, emb, labels, n_chunks=4)
+    logits = h @ emb.T
+    want = (jax.nn.logsumexp(logits, -1)
+            - jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+            ).mean()
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+    # gradient flows and matches
+    g1 = jax.grad(lambda h: C.chunked_xent(h, emb, labels, n_chunks=4))(h)
+    g2 = jax.grad(
+        lambda h: (jax.nn.logsumexp(h @ emb.T, -1) - jnp.take_along_axis(
+            h @ emb.T, labels[..., None], -1)[..., 0]).mean()
+    )(h)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_rope_rotation_properties():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(1, 6, 2, 8)), jnp.float32)
+    pos = jnp.arange(6)[None, :]
+    y = C.rope(x, pos)
+    # norm preservation per (pair) rotation
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5,
+    )
+    # position 0 is identity
+    np.testing.assert_allclose(
+        np.asarray(y[:, 0]), np.asarray(x[:, 0]), rtol=1e-6
+    )
+
+
+@pytest.mark.parametrize("arch_id", sorted(registry.ARCHS))
+def test_arch_smoke(arch_id):
+    """Reduced-config forward/train step per assigned architecture."""
+    registry.get(arch_id).smoke()

@@ -1,0 +1,85 @@
+"""Partition/halo invariants (the §3 machine model representation)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition as part
+from repro.graphs import generators as gen
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([1, 2, 3, 4]))
+def test_partition_edge_cover_and_halo(seed, p):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 40))
+    g = gen.random_graph(n, 0.25, seed=seed)
+    pg = part.partition_graph(g, p, window_cap=6)
+    # every global directed edge appears exactly once with a local row
+    seen = set()
+    for i in range(p):
+        for e in range(pg.E):
+            r, c = int(pg.row[i, e]), int(pg.col[i, e])
+            if r == pg.nil:
+                continue
+            gr, gc = int(pg.gid[i, r]), int(pg.gid[i, c])
+            if pg.is_local[i, r]:
+                key = (gr, gc)
+                assert key not in seen
+                seen.add(key)
+            else:  # reversed cut edge: ghost row -> local col
+                assert pg.is_local[i, c]
+    src = g.edge_sources()
+    assert seen == set(zip(src.tolist(), g.indices.tolist()))
+    # ghost board routing is consistent
+    for i in range(p):
+        for k in range(pg.G):
+            if not pg.is_ghost[i, pg.L + k]:
+                continue
+            o = int(pg.owner_pe[i, pg.L + k])
+            slot = int(pg.ghost_owner_slot[i, k])
+            lidx = int(pg.iface_slots[o, slot])
+            assert int(pg.gid[o, lidx]) == int(pg.gid[i, pg.L + k])
+
+
+def test_edge_balanced_split_improves_balance():
+    g = gen.rhg_like(3000, avg_deg=8, seed=0)
+    pg_v = part.partition_graph(g, 8, edge_balanced=False)
+    pg_e = part.partition_graph(g, 8, edge_balanced=True)
+
+    def edge_imbalance(pg):
+        counts = [(pg.row[i] != pg.nil).sum() for i in range(pg.p)]
+        return max(counts) / max(1, np.mean(counts))
+
+    assert edge_imbalance(pg_e) <= edge_imbalance(pg_v) + 1e-9
+
+
+def test_window_adjacency_bits_exact():
+    g = gen.random_graph(25, 0.4, seed=3)
+    pg = part.partition_graph(g, 2, window_cap=6)
+    for i in range(2):
+        es = set()
+        for e in range(pg.E):
+            r, c = int(pg.row[i, e]), int(pg.col[i, e])
+            if r != pg.nil:
+                es.add((r, c))
+        for v in range(pg.V):
+            for a in range(pg.D):
+                wa = int(pg.window[i, v, a])
+                for b in range(pg.D):
+                    wb = int(pg.window[i, v, b])
+                    bit = (int(pg.win_adj_bits[i, v, a]) >> b) & 1
+                    want = int(
+                        a != b and wa != pg.nil and wb != pg.nil
+                        and (wa, wb) in es
+                    )
+                    assert bit == want
+
+
+def test_pad_to_buckets():
+    g = gen.random_graph(10, 0.3, seed=1)
+    pg = part.partition_graph(
+        g, 2, pad_to=dict(L=32, G=40, E=500, B=16, S=16)
+    )
+    assert pg.L == 32 and pg.G == 40 and pg.E == 500
+    assert pg.B == 16 and pg.S == 16

@@ -1,0 +1,99 @@
+"""Single-PE vectorized rule sweeps: exactness vs brute force (hypothesis)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distributed as D
+from repro.core import partition as part
+from repro.core import rules as R
+from repro.core.bitset_mwis import alpha_subset, mwis_exact
+from repro.core.local_reduce import reduce_single_pe
+from repro.graphs import generators as gen
+from tests.helpers import SMALL_PAD, residual_exact_weight
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 100_000))
+def test_p1_rules_preserve_alpha(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 13))
+    g = gen.random_graph(n, float(rng.uniform(0.05, 0.8)), seed=seed)
+    best, _ = mwis_exact(g)
+    pg = part.partition_graph(g, 1, window_cap=8, common_cap=4,
+                              pad_to=SMALL_PAD)
+    state, prob, _ = D.disredu(pg, D.DisReduConfig(heavy_k=6))
+    wgt, indep = residual_exact_weight(g, pg, state, prob)
+    assert indep and wgt == best
+
+
+def test_alpha_neighborhood_matches_bitset():
+    """The in-JIT 2^K enumeration equals the host bitset solver."""
+    rng = np.random.default_rng(0)
+    for trial in range(20):
+        n = int(rng.integers(2, 10))
+        g = gen.random_graph(n, 0.5, seed=trial)
+        pg = part.partition_graph(g, 1, window_cap=8, common_cap=4)
+        from repro.core.local_reduce import make_aux
+
+        aux = make_aux(pg, pe=0)
+        state = R.init_state(
+            jnp.asarray(pg.w0[0]), jnp.asarray(pg.is_local[0]),
+            jnp.asarray(pg.is_ghost[0]),
+        )
+        alpha = np.asarray(
+            R._alpha_neighborhood(state.w, state.status, aux, 8)
+        )
+        for v in range(g.n):
+            if g.degree(v) > 8:
+                continue
+            nbrs = g.neighbors(v).tolist()
+            k = len(nbrs)
+            pos = {u: i for i, u in enumerate(nbrs)}
+            bits = np.zeros(k, dtype=np.int64)
+            for i, a in enumerate(nbrs):
+                for b in g.neighbors(a).tolist():
+                    if b in pos:
+                        bits[i] |= 1 << pos[b]
+            want = alpha_subset(g.weights[nbrs].astype(np.int64), bits)
+            assert alpha[v] == want, (trial, v)
+
+
+def test_exclusion_rules_keep_symmetric_edge():
+    """Regression: two equal-weight adjacent vertices must not exclude each
+    other in one batch (certificate priority guard)."""
+    from repro.core.graph import from_edge_list
+
+    g = from_edge_list(2, [(0, 1)], np.array([5, 5], dtype=np.int32))
+    pg = part.partition_graph(g, 1, window_cap=4, common_cap=2)
+    state, prob, _ = D.disredu(pg, D.DisReduConfig(heavy_k=4))
+    best, _ = mwis_exact(g)
+    wgt, indep = residual_exact_weight(g, pg, state, prob)
+    assert indep and wgt == best == 5
+
+
+def test_weight_transfer_chain():
+    """Cliques with a light simplicial center exercise WT + reconstruction."""
+    from repro.core.graph import from_edge_list
+
+    # triangle {0,1,2} + pendant 3 on vertex 1
+    g = from_edge_list(
+        4, [(0, 1), (1, 2), (0, 2), (1, 3)],
+        np.array([3, 10, 4, 9], dtype=np.int32),
+    )
+    best, _ = mwis_exact(g)
+    pg = part.partition_graph(g, 1, window_cap=4, common_cap=2)
+    state, prob, _ = D.disredu(pg, D.DisReduConfig(heavy_k=4))
+    wgt, indep = residual_exact_weight(g, pg, state, prob)
+    assert indep and wgt == best
+
+
+def test_fold_log_never_overflows():
+    g = gen.path_graph(50, seed=0)
+    pg = part.partition_graph(g, 1, window_cap=4, common_cap=2)
+    state, prob, _ = D.disredu(pg, D.DisReduConfig(heavy_k=4))
+    assert int(state.log_n) <= state.log_kind.shape[0] - 1
+    # paths reduce completely
+    status = np.asarray(state.status)
+    assert (status[np.asarray(prob.is_local)] != R.UNDECIDED).all()

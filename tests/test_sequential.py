@@ -1,0 +1,80 @@
+"""Sequential baseline (HtWIS-style) correctness: reductions are exact."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sequential as seq
+from repro.core.bitset_mwis import mwis_exact
+from repro.core.graph import from_edge_list
+from repro.graphs import generators as gen
+
+
+def _residual_bruteforce(r: seq.SequentialReducer):
+    alive = r.alive_vertices()
+    if not alive:
+        return
+    remap = {v: i for i, v in enumerate(alive)}
+    edges = [
+        (remap[v], remap[u])
+        for v in alive for u in r.adj[v] if v < u
+    ]
+    sub = from_edge_list(
+        len(alive), edges, np.array([r.w[v] for v in alive])
+    )
+    _, msub = mwis_exact(sub)
+    for i, v in enumerate(alive):
+        r.status[v] = seq.INCLUDED if msub[i] else seq.EXCLUDED
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10_000))
+def test_reduce_preserves_alpha(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 13))
+    g = gen.random_graph(n, float(rng.uniform(0.05, 0.8)), seed=seed)
+    best, _ = mwis_exact(g)
+    r = seq.reduce_graph(g)
+    _residual_bruteforce(r)
+    members = r.reconstruct()
+    assert g.is_independent_set(members)
+    assert g.set_weight(members) == best
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_reduce_without_folding_preserves_alpha(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 12))
+    g = gen.random_graph(n, 0.3, seed=seed + 1)
+    best, _ = mwis_exact(g)
+    cfg = seq.SeqConfig(use_folding=False)
+    r = seq.reduce_graph(g, cfg)
+    _residual_bruteforce(r)
+    members = r.reconstruct()
+    assert g.set_weight(members) == best
+
+
+def test_solvers_quality_ordering():
+    """Paper §7: RnP >= RG >= greedy on reducible instances (on average)."""
+    qual = {"rnp": [], "rg": [], "greedy": []}
+    for seed in range(6):
+        g = gen.rgg2d(300, avg_deg=7, seed=seed)
+        best, _ = mwis_exact if False else (None, None)
+        w_rnp, _ = seq.solve_reduce_and_peel(g)
+        w_rg, _ = seq.solve_reduce_and_greedy(g)
+        w_g, _ = seq.solve_greedy(g)
+        qual["rnp"].append(w_rnp)
+        qual["rg"].append(w_rg)
+        qual["greedy"].append(w_g)
+    assert np.mean(qual["rnp"]) >= np.mean(qual["rg"]) * 0.999
+    assert np.mean(qual["rg"]) >= np.mean(qual["greedy"]) * 0.98
+
+
+def test_exact_solvers_on_structured_graphs():
+    for make, n in ((gen.path_graph, 12), (gen.star_graph, 9)):
+        g = make(n, seed=3)
+        best, _ = mwis_exact(g)
+        w, _ = seq.solve_reduce_and_peel(g)
+        # paths and stars reduce completely -> peel never lowers quality
+        assert w == best
