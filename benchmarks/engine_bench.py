@@ -1,0 +1,109 @@
+"""Aggregate-engine benchmark: per-sweep timing per backend → BENCH_engine.json.
+
+Times ONE reduction sweep (the engine's unit of work: aggregate computation
++ all scheduled rule families) on the paper's generator families, under
+
+  * the seed-semantics reference (frozen oracle, fused sweep, jnp ops),
+  * the engine jnp backend        (op-identical to the seed — the
+                                   no-regression check),
+  * the engine blocked backend    (blocked-ELL layout, jnp block kernels),
+  * the engine pallas backend     (fused multi-payload kernel; interpret
+                                   mode off TPU, so only a small instance —
+                                   interpret timings measure correctness
+                                   plumbing, not TPU performance).
+
+Emits BENCH_engine.json so the perf trajectory of the hot path is recorded
+per PR.  Run via ``python benchmarks/run.py --engine-only``.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _time_interleaved(entries, reps: int = 30) -> dict:
+    """entries: {label: (fn, state)} → min-of-reps us, reps interleaved
+    across labels so machine noise hits every backend equally."""
+    for fn, state in entries.values():
+        jax.block_until_ready(fn(state))  # compile
+        jax.block_until_ready(fn(state))  # warm
+    best = {label: float("inf") for label in entries}
+    for _ in range(reps):
+        for label, (fn, state) in entries.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(state))
+            best[label] = min(best[label], time.perf_counter() - t0)
+    return {label: round(us * 1e6, 1) for label, us in best.items()}
+
+
+def _bench_graph(name, g, p, *, schedule: str, with_pallas: bool,
+                 seed_oracle=None) -> dict:
+    from repro.core import distributed as D, engine as E, rules as R
+
+    from repro.core import partition as part
+
+    row = {"graph": name, "n": g.n, "m": g.m, "p": p, "schedule": schedule}
+    pg = part.partition_graph(g, p, window_cap=12)
+    entries = {}
+    for backend in ("jnp", "blocked") + (("pallas",) if with_pallas else ()):
+        prob = D.build_union_problem(pg, backend)
+        state0 = R.init_state(prob.w0, prob.is_local, prob.is_ghost)
+        fn = jax.jit(lambda s, _aux=prob.aux, _pl=prob.plan, _b=backend:
+                     E.sweep(s, _aux, schedule=schedule, backend=_b, plan=_pl))
+        label = "pallas-interpret" if (
+            backend == "pallas" and jax.default_backend() != "tpu"
+        ) else backend
+        entries[label] = (fn, state0)
+    if seed_oracle is not None:
+        prob = D.build_union_problem(pg)
+        state0 = seed_oracle.init_state(
+            prob.w0, prob.is_local, prob.is_ghost
+        )
+        entries["seed-fused-jnp"] = (
+            jax.jit(lambda s, _aux=prob.aux:
+                    seed_oracle.sweep_cheap_fused(s, _aux)),
+            state0,
+        )
+    row["per_sweep_us"] = _time_interleaved(entries)
+    return row
+
+
+def run_engine_bench(out_path: str = "BENCH_engine.json",
+                     seed_oracle=None) -> dict:
+    from repro.graphs import generators as gen
+
+    results = []
+    for fam, n in (("gnm", 2000), ("rgg", 2000), ("rhg", 1500)):
+        g = gen.FAMILIES[fam](n, seed=7)
+        results.append(_bench_graph(
+            f"{fam}_n{n}", g, 4, schedule="cheap-fused",
+            with_pallas=False, seed_oracle=seed_oracle,
+        ))
+    # pallas path: interpret mode is orders slower than compiled — bench a
+    # small instance only, as a plumbing/latency record (TPU numbers TBD)
+    g = gen.FAMILIES["rgg"](300, seed=7)
+    results.append(_bench_graph(
+        "rgg_n300_small", g, 2, schedule="cheap-fused", with_pallas=True,
+    ))
+    payload = {
+        "meta": {
+            "unit": "us per reduction sweep (aggregates + all scheduled "
+                    "rule families), union path",
+            "jax": jax.__version__,
+            "device": jax.default_backend(),
+            "note": "engine jnp backend is op-identical to the seed sweep "
+                    "(bit-parity: tests/test_engine_parity.py); "
+                    "seed-fused-jnp rows time the frozen seed oracle "
+                    "directly — the no-regression reference",
+        },
+        "results": results,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return payload

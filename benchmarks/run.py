@@ -1,4 +1,7 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# ``--engine-only`` (or the default full run) also times one reduction
+# sweep per aggregate backend and writes BENCH_engine.json.
+import argparse
 import os
 import sys
 
@@ -6,13 +9,41 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
+def _engine_bench(out_path: str) -> None:
+    from benchmarks.engine_bench import run_engine_bench
+
+    try:
+        from tests import seed_oracle
+    except ImportError:
+        seed_oracle = None
+    payload = run_engine_bench(out_path, seed_oracle=seed_oracle)
+    for row in payload["results"]:
+        for backend, us in row["per_sweep_us"].items():
+            print(f"engine_sweep/{row['graph']}/{backend},{us:.1f},"
+                  f"schedule={row['schedule']}", flush=True)
+    print(f"# wrote {out_path}", flush=True)
+
+
 def main() -> None:
-    from benchmarks import paper_tables
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine-only", action="store_true",
+                    help="only the aggregate-engine sweep bench + "
+                         "BENCH_engine.json")
+    ap.add_argument("--skip-engine", action="store_true",
+                    help="paper tables only, no BENCH_engine.json")
+    ap.add_argument("--engine-out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_engine.json"))
+    args = ap.parse_args()
 
     print("name,us_per_call,derived")
-    for bench in paper_tables.ALL:
-        for name, us, derived in bench():
-            print(f"{name},{us:.1f},{derived}", flush=True)
+    if not args.engine_only:
+        from benchmarks import paper_tables
+
+        for bench in paper_tables.ALL:
+            for name, us, derived in bench():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+    if not args.skip_engine:
+        _engine_bench(args.engine_out)
 
 
 if __name__ == "__main__":

@@ -49,15 +49,21 @@ RECSYS_SHAPES: Dict[str, Dict[str, Any]] = {
     "retrieval_cand": dict(kind="retrieval", batch=1, n_candidates=1_000_000),
 }
 
-# the paper's own workload as an 11th selectable arch (PE-flattened mesh)
+# the paper's own workload as an 11th selectable arch (PE-flattened mesh).
+# `schedule` names the rule schedule (repro.core.engine.SCHEDULES) each cell
+# runs per round: the weak-scaling reduce cells take the fused hot path;
+# the RnP cell runs the cheaper windowless schedule between peels.
 MWIS_SHAPES: Dict[str, Dict[str, Any]] = {
     # weak-scaling cells (paper §7): per-PE vertices/edges as on HoreKa
     "weak_1m": dict(kind="reduce", L=1 << 20, E=1 << 23, G=1 << 16,
-                    B=1 << 16, S=1 << 10, D=16, Dc=4),
+                    B=1 << 16, S=1 << 10, D=16, Dc=4,
+                    schedule="cheap-fused"),
     "weak_4m": dict(kind="reduce", L=1 << 22, E=1 << 25, G=1 << 17,
-                    B=1 << 17, S=1 << 11, D=16, Dc=4),
+                    B=1 << 17, S=1 << 11, D=16, Dc=4,
+                    schedule="cheap-fused"),
     "strong_128m": dict(kind="rnp", L=1 << 18, E=1 << 21, G=1 << 15,
-                        B=1 << 15, S=1 << 10, D=16, Dc=4),
+                        B=1 << 15, S=1 << 10, D=16, Dc=4,
+                        schedule="edges-only"),
 }
 
 
@@ -366,6 +372,7 @@ def mwis_build(shape_name: str, mesh, fsdp,
     from repro.core.distributed import DisReduConfig
     from repro.core.partition import PartitionedGraph
     from repro.core import solvers as SOL
+    from repro.configs import mwis as _mwis
 
     meta = MWIS_SHAPES[shape_name]
     p = int(np.prod(mesh.devices.shape))
@@ -388,7 +395,8 @@ def mwis_build(shape_name: str, mesh, fsdp,
     cfg = DisReduConfig(
         heavy_k=int(ov.get("heavy_k", 8)), mode="async", stale_sweeps=2,
         exchange=ov.get("exchange", "allgather"), max_rounds=64,
-        fused_sweeps=bool(ov.get("fused_sweeps", False)),
+        schedule=str(ov.get("schedule", _mwis.rule_schedule(shape_name))),
+        backend=str(ov.get("backend", "jnp")),
         use_heavy=bool(ov.get("use_heavy", True)),
     )
     if (overrides or {}).get("probe"):

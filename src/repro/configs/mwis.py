@@ -3,6 +3,14 @@
 Shapes follow the paper's weak-scaling setup (§7: N = 2^20 vertices and
 M = 2^22 edges per core, growing with p) plus a strong-scaling RnP cell.
 The PE axis is the flattened production mesh (pod × data × model).
+
+Every shape cell carries a named **rule schedule** (an
+``repro.core.engine.SCHEDULES`` key) consumed by the reduction drivers:
+the weak-scaling reduce cells run the fused hot path ("cheap-fused"), the
+RnP cell runs the cheaper windowless schedule ("edges-only") between
+peels.  Override per run with ``overrides={"schedule": ..., "backend":
+...}``; backends pick the segment-reduction implementation (jnp portable,
+pallas blocked-ELL on TPU).
 """
 
 from __future__ import annotations
@@ -10,6 +18,11 @@ from __future__ import annotations
 import functools
 
 from repro.configs import base
+
+
+def rule_schedule(shape_name: str) -> str:
+    """The named rule schedule a shape cell reduces with."""
+    return base.MWIS_SHAPES[shape_name].get("schedule", "cheap-fused")
 
 
 def smoke():

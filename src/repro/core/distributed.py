@@ -26,18 +26,34 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine as E
 from repro.core import exchange as X
 from repro.core import rules as R
 from repro.core.local_reduce import local_reduce
 from repro.core.partition import PartitionedGraph
 
 UNDECIDED, INCLUDED, EXCLUDED, FOLDED = 0, 1, 2, 3
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs, check_vma: bool = False):
+    """jax.shard_map across jax versions (new API vs jax.experimental)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,7 +63,8 @@ class DisReduConfig:
     mode: str = "sync"            # "sync" = DisReduS | "async" = DisReduA
     stale_sweeps: int = 2         # async: sweeps between exchanges
     exchange: str = "allgather"   # "allgather" | "a2a"  (shard_map path)
-    fused_sweeps: bool = False    # §Perf H3: share aggregates per sweep
+    schedule: str = "cheap"       # named rule schedule (engine.SCHEDULES)
+    backend: str = "jnp"          # aggregate backend: jnp | blocked | pallas
     max_rounds: int = 10_000
 
     @property
@@ -63,9 +80,12 @@ class UnionProblem(NamedTuple):
     halo: X.Halo
     p: int
     V: int  # per-PE vertex count (union total = p * V)
+    plan: Optional[E.SegPlan] = None  # blocked-ELL packing (non-jnp backends)
 
 
-def build_union_problem(pg: PartitionedGraph) -> UnionProblem:
+def build_union_problem(
+    pg: PartitionedGraph, backend: str = "jnp"
+) -> UnionProblem:
     """Stack all PEs into one block-diagonal graph with offset indices."""
     p, V = pg.p, pg.V
     off_v = (np.arange(p, dtype=np.int64) * V)[:, None]
@@ -90,11 +110,12 @@ def build_union_problem(pg: PartitionedGraph) -> UnionProblem:
         edge_common=jnp.asarray(edge_common),
     )
     halo = X.make_halo(pg, pe=None)
+    plan = None if backend == "jnp" else E.build_plan(row, p * V)
     return UnionProblem(
         w0=jnp.asarray(pg.w0.reshape(-1)),
         is_local=jnp.asarray(pg.is_local.reshape(-1)),
         is_ghost=jnp.asarray(pg.is_ghost.reshape(-1)),
-        aux=aux, halo=halo, p=p, V=V,
+        aux=aux, halo=halo, p=p, V=V, plan=plan,
     )
 
 
@@ -104,7 +125,8 @@ def build_union_problem(pg: PartitionedGraph) -> UnionProblem:
 def _round_union(state, prob: UnionProblem, cfg: DisReduConfig):
     state = local_reduce(
         state, prob.aux, heavy_k=cfg.heavy_k, use_heavy=cfg.use_heavy,
-        max_sweeps=cfg.sweeps_per_round, fused=cfg.fused_sweeps,
+        max_sweeps=cfg.sweeps_per_round, schedule=cfg.schedule,
+        backend=cfg.backend, plan=prob.plan,
     )
     state, _ = X.exchange_union(state, prob.aux, prob.halo, p=prob.p)
     return state
@@ -113,17 +135,18 @@ def _round_union(state, prob: UnionProblem, cfg: DisReduConfig):
 @functools.partial(
     jax.jit,
     static_argnames=("heavy_k", "use_heavy", "sweeps", "max_rounds", "p",
-                     "fused"),
+                     "schedule", "backend"),
 )
 def _disredu_union_jit(
-    w0, is_local, is_ghost, aux, halo, *, heavy_k, use_heavy, sweeps,
-    max_rounds, p, fused=False
+    w0, is_local, is_ghost, aux, halo, plan, *, heavy_k, use_heavy, sweeps,
+    max_rounds, p, schedule="cheap", backend="jnp"
 ):
-    prob = UnionProblem(w0, is_local, is_ghost, aux, halo, p, 0)
+    prob = UnionProblem(w0, is_local, is_ghost, aux, halo, p, 0, plan)
     cfg = DisReduConfig(
         heavy_k=heavy_k, use_heavy=use_heavy,
         mode="sync" if sweeps >= 1_000_000 else "async",
-        stale_sweeps=sweeps, max_rounds=max_rounds, fused_sweeps=fused,
+        stale_sweeps=sweeps, max_rounds=max_rounds, schedule=schedule,
+        backend=backend,
     )
     state0 = R.init_state(w0, is_local, is_ghost)
 
@@ -148,12 +171,13 @@ def disredu(
     pg: PartitionedGraph, cfg: DisReduConfig = DisReduConfig()
 ) -> Tuple[R.RedState, UnionProblem, int]:
     """Run DisReduS/DisReduA on the union simulation path."""
-    prob = build_union_problem(pg)
+    prob = build_union_problem(pg, cfg.backend)
     state, rounds = _disredu_union_jit(
         prob.w0, prob.is_local, prob.is_ghost, prob.aux, prob.halo,
+        prob.plan,
         heavy_k=cfg.heavy_k, use_heavy=cfg.use_heavy,
         sweeps=cfg.sweeps_per_round, max_rounds=cfg.max_rounds, p=prob.p,
-        fused=cfg.fused_sweeps,
+        schedule=cfg.schedule, backend=cfg.backend,
     )
     return state, prob, int(rounds)
 
@@ -161,43 +185,69 @@ def disredu(
 # --------------------------------------------------------------------- #
 # shard_map path (production; also the dry-run lowering target)
 # --------------------------------------------------------------------- #
+def shard_map_arrays(pg: PartitionedGraph, cfg: DisReduConfig):
+    """The stacked [p, ...] host arrays a shard_map driver consumes — the
+    partitioned graph plus, for non-jnp backends, the per-PE blocked-ELL
+    plan (packed host-side with a shared E_BLK so it meshes-shards)."""
+    arrs = dict(pg.device_arrays())
+    if cfg.backend != "jnp":
+        if pg.row is None:
+            raise ValueError(
+                "backend=%r needs concrete edge arrays to pack the "
+                "blocked-ELL plan; abstract (dry-run) graphs must use the "
+                "jnp backend" % (cfg.backend,)
+            )
+        plan = E.build_plan_stacked(pg.row, pg.V)
+        arrs["plan_perm"] = np.asarray(plan.edge_perm)
+        arrs["plan_lrow"] = np.asarray(plan.lrow)
+    return arrs
+
+
+def _unpack_per_pe(pg: PartitionedGraph, keys, args):
+    """Squeeze the leading PE axis and rebuild (aux, halo, plan, a)."""
+    a = dict(zip(keys, [x.reshape(x.shape[1:]) for x in args]))
+    aux = R.Aux(
+        row=a["row"], col=a["col"], gid=a["gid"], is_local=a["is_local"],
+        is_iface=a["is_iface"], owner_rank=a["owner_pe"],
+        window=a["window"], win_complete=a["win_complete"],
+        win_adj_bits=a["win_adj_bits"], edge_common=a["edge_common"],
+    )
+    L, G = pg.L, pg.G
+    halo = X.Halo(
+        iface_slots=a["iface_slots"],
+        ghost_vertex=L + jnp.arange(G, dtype=jnp.int32),
+        ghost_owner_pe=jnp.maximum(a["owner_pe"][L : L + G], 0),
+        ghost_owner_slot=a["ghost_owner_slot"],
+        ghost_valid=a["is_ghost"][L : L + G],
+        send_slot=a["send_slot"], recv_ghost=a["recv_ghost"],
+    )
+    plan = (
+        E.SegPlan(edge_perm=a["plan_perm"], lrow=a["plan_lrow"])
+        if "plan_perm" in a else None
+    )
+    return aux, halo, plan, a
+
+
 def disredu_shard_map_fn(pg: PartitionedGraph, cfg: DisReduConfig, mesh,
                          axis: str = "pe"):
     """Return a jit-able function over stacked [p, ...] arrays running the
     full DisRedu round loop under shard_map on `mesh` (axis name `axis`)."""
     from jax.sharding import PartitionSpec as P
 
-    arrs = pg.device_arrays()
-    specs = {k: P(axis) for k in arrs}
+    arrs = shard_map_arrays(pg, cfg)
+    keys = list(arrs.keys())
 
-    def per_pe(row, col, w0, gid, is_local, is_ghost, is_iface, owner_pe,
-               iface_slots, ghost_owner_slot, window, win_complete,
-               win_adj_bits, edge_common, send_slot, recv_ghost):
-        sq = lambda a: a.reshape(a.shape[1:])
-        row, col = sq(row), sq(col)
-        aux = R.Aux(
-            row=row, col=col, gid=sq(gid), is_local=sq(is_local),
-            is_iface=sq(is_iface), owner_rank=sq(owner_pe),
-            window=sq(window), win_complete=sq(win_complete),
-            win_adj_bits=sq(win_adj_bits), edge_common=sq(edge_common),
-        )
-        L, G = pg.L, pg.G
-        halo = X.Halo(
-            iface_slots=sq(iface_slots),
-            ghost_vertex=L + jnp.arange(G, dtype=jnp.int32),
-            ghost_owner_pe=jnp.maximum(sq(owner_pe)[L : L + G], 0),
-            ghost_owner_slot=sq(ghost_owner_slot),
-            ghost_valid=sq(is_ghost)[L : L + G],
-            send_slot=sq(send_slot), recv_ghost=sq(recv_ghost),
-        )
-        state0 = R.init_state(sq(w0), sq(is_local), sq(is_ghost))
+    def per_pe(*args):
+        aux, halo, plan, a = _unpack_per_pe(pg, keys, args)
+        state0 = R.init_state(a["w0"], a["is_local"], a["is_ghost"])
 
         def body(carry):
             state, rounds, _ = carry
             snap_s, snap_w = state.status, state.w
             state = local_reduce(
                 state, aux, heavy_k=cfg.heavy_k, use_heavy=cfg.use_heavy,
-                max_sweeps=cfg.sweeps_per_round, fused=cfg.fused_sweeps,
+                max_sweeps=cfg.sweeps_per_round, schedule=cfg.schedule,
+                backend=cfg.backend, plan=plan,
             )
             state, _ = X.exchange_shmap(
                 state, aux, halo, axis=axis, method=cfg.exchange
@@ -221,15 +271,13 @@ def disredu_shard_map_fn(pg: PartitionedGraph, cfg: DisReduConfig, mesh,
             ex(state.log_v), ex(state.log_u), ex(state.log_n), \
             ex(state.offset), ex(rounds)
 
-    keys = list(arrs.keys())
-    in_specs = tuple(specs[k] for k in keys)
+    in_specs = tuple(P(axis) for _ in keys)
     out_specs = (P(axis),) * 8
-    fn = jax.shard_map(
-        per_pe, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False,
-    )
+    fn = shard_map_compat(per_pe, mesh, in_specs, out_specs)
 
-    def run(arrays):
+    def run(arrays=None):
+        arrays = arrays if arrays is not None else \
+            {k: jnp.asarray(v) for k, v in arrs.items()}
         return fn(*(arrays[k] for k in keys))
 
     return run, keys

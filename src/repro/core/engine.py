@@ -1,0 +1,282 @@
+"""Aggregate engine — one pluggable backend for every rule-test aggregate.
+
+The paper's reduction rules "act very locally": every rule *test* is a
+bounded neighborhood aggregate (sum / max over the masked edge list, plus
+capped-window clique bits).  Rule portfolios keep growing (Großmann et al.'s
+rule survey, the KaMIS reduce-and-peel line), which is only sustainable if
+rules *declare* the aggregates they need and a single engine computes them —
+once per sweep, on the fastest available backend — instead of every rule
+family issuing its own ad-hoc segment reductions.
+
+Three pieces:
+
+  * **declarations** — each rule in :mod:`repro.core.rules` carries a
+    ``requires`` frozenset (``@_requires``) naming the :class:`SweepCtx`
+    fields its test reads.  The engine computes exactly the union of the
+    scheduled rules' requirements; undeclared fields stay ``None``.
+  * **schedules** — the rule order is data, not code: a named
+    :class:`Schedule` lists the rule families to run and the aggregate
+    *refresh* granularity:
+
+      - ``refresh="rule"``  — aggregates recomputed before every rule
+        (the seed PR's exact per-rule semantics; parity oracle in
+        ``tests/seed_oracle.py``),
+      - ``refresh="sweep"`` — aggregates snapshotted ONCE per sweep and
+        shared by all families (the fused hot path; tests go conservatively
+        stale, applications stay fresh — see the SweepCtx docstring and
+        ARCHITECTURE.md for the soundness argument).
+
+  * **backends** — the segment reductions behind the aggregates dispatch
+    through one of:
+
+      - ``"jnp"``     — ``jax.ops.segment_*`` (portable; XLA sort-based),
+      - ``"blocked"`` — blocked-ELL layout via the precomputed
+        :class:`SegPlan` packing, jnp per-block reference kernels,
+      - ``"pallas"``  — the same blocked-ELL layout through the fused
+        multi-payload Pallas kernel (`kernels/segment_coo`), one pass over
+        the packed edge blocks for all sum+max payloads (interpret mode off
+        TPU).
+
+    All payloads are int32, and integer addition is associative, so all
+    three backends are **bit-identical** — backend choice is purely a
+    performance decision.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.ops import segment_max
+
+from repro.core import rules as R
+from repro.kernels.segment_coo.ops import (
+    pack_blocks, pack_blocks_stacked, segment_fused_coo,
+)
+
+I32_MIN = jnp.iinfo(jnp.int32).min
+
+#: SweepCtx fields a rule may declare via @_requires (validated there).
+AGGREGATES = R.SweepCtx._fields
+
+#: Aggregate backends (see module docstring).
+BACKENDS = ("jnp", "blocked", "pallas")
+
+#: Row-block height of the blocked-ELL packing (sublane-aligned).
+R_BLK = 8
+
+#: Rule registry: schedule entries name rules; order comes from Schedule.
+RULES = {
+    "degree_one": R.rule_degree_one,
+    "neighborhood_removal": R.rule_neighborhood_removal,
+    "weight_transfer": R.rule_weight_transfer,
+    "simplicial": R.rule_simplicial,
+    "basic_single_edge": R.rule_basic_single_edge,
+    "extended_single_edge": R.rule_extended_single_edge,
+}
+
+
+class Schedule(NamedTuple):
+    """A rule schedule: which families run, in what order, and how often
+    their test aggregates are refreshed ("rule" | "sweep")."""
+
+    rules: Tuple[str, ...]
+    refresh: str
+
+
+#: The paper's §5.1 cheap-family order.
+CHEAP_ORDER = (
+    "degree_one",
+    "neighborhood_removal",
+    "weight_transfer",
+    "simplicial",
+    "basic_single_edge",
+    "extended_single_edge",
+)
+
+#: Named schedules consumed by DisReduConfig.schedule.
+SCHEDULES = {
+    # seed per-rule semantics: every family sees fresh aggregates
+    "cheap": Schedule(CHEAP_ORDER, "rule"),
+    # fused hot path: aggregates snapshotted once per sweep (§Perf H3)
+    "cheap-fused": Schedule(CHEAP_ORDER, "sweep"),
+    # cheaper per-round schedules for reduce-and-greedy / reduce-and-peel:
+    # no window/clique machinery at all (degree + neighborhood sums only)
+    "light": Schedule(("degree_one", "neighborhood_removal"), "sweep"),
+    # everything except the capped-window clique rules
+    "edges-only": Schedule(
+        ("degree_one", "neighborhood_removal", "basic_single_edge",
+         "extended_single_edge"),
+        "sweep",
+    ),
+}
+
+
+def schedule_requires(schedule: Schedule) -> frozenset:
+    """Union of the scheduled rules' aggregate declarations."""
+    req = frozenset()
+    for name in schedule.rules:
+        req |= RULES[name].requires
+    return req
+
+
+# --------------------------------------------------------------------- #
+# blocked-ELL plans (host-side packing of the static edge list)
+# --------------------------------------------------------------------- #
+class SegPlan(NamedTuple):
+    """Precomputed blocked-ELL packing of one (static) row array.
+
+    Built host-side once per Aux; the jitted sweep only gathers through it.
+    """
+
+    edge_perm: jax.Array   # [n_blocks, E_BLK] i32 (stacked: [p, nb, E_BLK])
+    lrow: jax.Array        # [n_blocks, E_BLK] i32
+
+
+def build_plan(row: np.ndarray, n_rows: int, *, r_blk: int = R_BLK) -> SegPlan:
+    """Pack one PE's (or the union graph's) row array."""
+    perm, lrow, _ = pack_blocks(np.asarray(row), n_rows, r_blk=r_blk)
+    return SegPlan(
+        edge_perm=jnp.asarray(perm, jnp.int32),
+        lrow=jnp.asarray(lrow, jnp.int32),
+    )
+
+
+def build_plan_stacked(
+    rows: np.ndarray, n_rows: int, *, r_blk: int = R_BLK,
+) -> SegPlan:
+    """Stacked [p, ...] plan for the shard_map path (shared E_BLK)."""
+    perm, lrow, _ = pack_blocks_stacked(
+        np.asarray(rows), n_rows, r_blk=r_blk
+    )
+    return SegPlan(
+        edge_perm=jnp.asarray(perm, jnp.int32),
+        lrow=jnp.asarray(lrow, jnp.int32),
+    )
+
+
+# --------------------------------------------------------------------- #
+# aggregate computation (the backend dispatch)
+# --------------------------------------------------------------------- #
+def compute_ctx(
+    state: R.RedState,
+    aux: R.Aux,
+    requires: frozenset,
+    *,
+    backend: str = "jnp",
+    plan: Optional[SegPlan] = None,
+) -> R.SweepCtx:
+    """Compute exactly the requested aggregates into a SweepCtx.
+
+    `requires` and `backend` are trace-static; `plan` is a traced pytree
+    (None for the jnp backend).
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown aggregate backend {backend!r}")
+    if backend != "jnp" and plan is None:
+        raise ValueError(f"backend {backend!r} needs a SegPlan (got None)")
+    V = state.w.shape[0]
+    active = R._active(state)
+    eact = R._edge_active(aux, active)
+    S = deg = M = only = act_bits = clique = None
+
+    edge_req = requires & {"S", "deg", "M", "only"}
+    if edge_req and backend == "jnp":
+        if "S" in edge_req:
+            S = R._nbr_sum(aux, eact, R._aw(state, active), V)
+        if "deg" in edge_req:
+            deg = R._act_deg(aux, eact, V)
+        if "M" in edge_req:
+            M = R._nbr_max(aux, eact, state.w, V)
+        if "only" in edge_req:
+            only = jnp.maximum(
+                segment_max(
+                    jnp.where(eact, aux.col, -1), aux.row, num_segments=V
+                ),
+                0,
+            )
+    elif edge_req:
+        # blocked-ELL: ONE fused pass over the packed edge blocks computes
+        # every sum and max payload together (int32 => bit-identical to jnp)
+        sum_fields = [f for f in ("S", "deg") if f in edge_req]
+        max_fields = [f for f in ("M", "only") if f in edge_req]
+        payload = {
+            "S": lambda: jnp.where(eact, R._aw(state, active)[aux.col], 0),
+            "deg": lambda: eact.astype(jnp.int32),
+            "M": lambda: jnp.where(eact, state.w[aux.col], I32_MIN),
+            "only": lambda: jnp.where(eact, aux.col, -1),
+        }
+        data_sum = (
+            jnp.stack([payload[f]() for f in sum_fields], axis=1)
+            if sum_fields else None
+        )
+        data_max = (
+            jnp.stack([payload[f]() for f in max_fields], axis=1)
+            if max_fields else None
+        )
+        sums, maxs, _ = segment_fused_coo(
+            plan.edge_perm, plan.lrow, V,
+            data_sum=data_sum, data_max=data_max,
+            r_blk=R_BLK, force_pallas=(backend == "pallas"),
+        )
+        out = {}
+        for i, f in enumerate(sum_fields):
+            out[f] = sums[:, i]
+        for i, f in enumerate(max_fields):
+            out[f] = maxs[:, i]
+        S, deg = out.get("S"), out.get("deg")
+        if "M" in out:
+            M = jnp.maximum(out["M"], I32_MIN)
+        if "only" in out:
+            only = jnp.maximum(out["only"], 0)
+
+    if "act_bits" in requires or "clique" in requires:
+        act_bits = R._window_active_bits(state, aux)
+    if "clique" in requires:
+        clique = R._is_clique(state, aux, act_bits)
+    if "act_bits" not in requires:
+        act_bits = None
+    return R.SweepCtx(
+        S=S, deg=deg, M=M, only=only, act_bits=act_bits, clique=clique
+    )
+
+
+# --------------------------------------------------------------------- #
+# sweep driver
+# --------------------------------------------------------------------- #
+def sweep(
+    state: R.RedState,
+    aux: R.Aux,
+    *,
+    schedule: str = "cheap",
+    backend: str = "jnp",
+    plan: Optional[SegPlan] = None,
+) -> R.RedState:
+    """One pass of the scheduled rule families.
+
+    refresh="sweep": the union of the schedule's aggregate requirements is
+    computed ONCE and shared by every family (tests conservatively stale,
+    applications fresh).  refresh="rule": each family gets its declared
+    aggregates recomputed at rule entry (seed per-rule semantics).
+    """
+    if schedule not in SCHEDULES:
+        raise ValueError(
+            f"unknown rule schedule {schedule!r}; "
+            f"available: {sorted(SCHEDULES)}"
+        )
+    sched = SCHEDULES[schedule]
+    if sched.refresh == "sweep":
+        ctx = compute_ctx(
+            state, aux, schedule_requires(sched), backend=backend, plan=plan
+        )
+        for name in sched.rules:
+            state = RULES[name](state, aux, ctx)
+    else:
+        for name in sched.rules:
+            ctx = compute_ctx(
+                state, aux, RULES[name].requires, backend=backend, plan=plan
+            )
+            state = RULES[name](state, aux, ctx)
+    return state

@@ -2,19 +2,24 @@
 
 Per PE, rules sweep until no rule fires — the paper restarts from the first
 rule after every successful application; our batched equivalent applies all
-cheap families per sweep and only pays for Distributed Heavy Vertex (the
-expensive exact-sub-MWIS rule, last in the paper's order too) on sweeps
-where the cheap families made no progress.
+scheduled cheap families per sweep and only pays for Distributed Heavy
+Vertex (the expensive exact-sub-MWIS rule, last in the paper's order too) on
+sweeps where the cheap families made no progress.
+
+Which families run, and how their test aggregates are computed, is data:
+the `schedule` names an :data:`repro.core.engine.SCHEDULES` entry and the
+`backend`/`plan` pair picks the segment-reduction backend (see engine.py).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine as E
 from repro.core import rules as R
 from repro.core.partition import PartitionedGraph
 
@@ -42,15 +47,18 @@ def local_reduce(
     heavy_k: int = 8,
     use_heavy: bool = True,
     max_sweeps: int = 10_000,
-    fused: bool = False,
+    schedule: str = "cheap",
+    backend: str = "jnp",
+    plan: Optional[E.SegPlan] = None,
 ) -> R.RedState:
     """Run rule sweeps to the local fixpoint (lax.while_loop)."""
-    sweep = R.sweep_cheap_fused if fused else R.sweep_cheap
 
     def body(carry):
         state, _ = carry
         state = state._replace(changed=jnp.zeros((), bool))
-        state = sweep(state, aux)
+        state = E.sweep(
+            state, aux, schedule=schedule, backend=backend, plan=plan
+        )
         if use_heavy:
             state = jax.lax.cond(
                 state.changed,
@@ -71,23 +79,31 @@ def local_reduce(
     return state
 
 
-@functools.partial(jax.jit, static_argnames=("heavy_k", "use_heavy"))
-def _reduce_jit(w0, is_local, is_ghost, aux, heavy_k, use_heavy):
+@functools.partial(
+    jax.jit, static_argnames=("heavy_k", "use_heavy", "schedule", "backend")
+)
+def _reduce_jit(w0, is_local, is_ghost, aux, plan, heavy_k, use_heavy,
+                schedule, backend):
     state = R.init_state(w0, is_local, is_ghost)
-    return local_reduce(state, aux, heavy_k=heavy_k, use_heavy=use_heavy)
+    return local_reduce(
+        state, aux, heavy_k=heavy_k, use_heavy=use_heavy,
+        schedule=schedule, backend=backend, plan=plan,
+    )
 
 
 def reduce_single_pe(
-    pg: PartitionedGraph, *, heavy_k: int = 8, use_heavy: bool = True
+    pg: PartitionedGraph, *, heavy_k: int = 8, use_heavy: bool = True,
+    schedule: str = "cheap", backend: str = "jnp",
 ) -> Tuple[R.RedState, R.Aux]:
     """Single-PE (p must be 1) reduction — the sequential-semantics entry
     point used by tests and as the p=1 baseline of the scaling benches."""
     assert pg.p == 1, "reduce_single_pe expects an unpartitioned graph"
     aux = make_aux(pg, pe=0)
+    plan = None if backend == "jnp" else E.build_plan(pg.row[0], pg.V)
     state = _reduce_jit(
         jnp.asarray(pg.w0[0]),
         jnp.asarray(pg.is_local[0]),
         jnp.asarray(pg.is_ghost[0]),
-        aux, heavy_k, use_heavy,
+        aux, plan, heavy_k, use_heavy, schedule, backend,
     )
     return state, aux

@@ -25,10 +25,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.ops import segment_max
 
+from repro.core import engine as E
 from repro.core import exchange as X
 from repro.core import rules as R
 from repro.core.distributed import (
-    DisReduConfig, UnionProblem, build_union_problem,
+    DisReduConfig, UnionProblem, _unpack_per_pe, build_union_problem,
+    shard_map_arrays, shard_map_compat,
 )
 from repro.core.local_reduce import local_reduce
 from repro.core.partition import PartitionedGraph
@@ -48,13 +50,15 @@ class Ctx(NamedTuple):
 # --------------------------------------------------------------------- #
 # algorithm bodies (layout-agnostic)
 # --------------------------------------------------------------------- #
-def _reduce_to_fixpoint(state, aux, ctx: Ctx, cfg: DisReduConfig):
+def _reduce_to_fixpoint(state, aux, ctx: Ctx, cfg: DisReduConfig,
+                        plan=None):
     def body(carry):
         state, rounds, _ = carry
         snap_s, snap_w = state.status, state.w
         state = local_reduce(
             state, aux, heavy_k=cfg.heavy_k, use_heavy=cfg.use_heavy,
-            max_sweeps=cfg.sweeps_per_round, fused=cfg.fused_sweeps,
+            max_sweeps=cfg.sweeps_per_round, schedule=cfg.schedule,
+            backend=cfg.backend, plan=plan,
         )
         state, _ = ctx.exchange(state)
         changed = ctx.gany(
@@ -120,13 +124,13 @@ def _greedy_rounds(state, aux, ctx: Ctx, max_rounds: int = 100_000):
 
 
 def _rnp_loop(state, aux, ctx: Ctx, cfg: DisReduConfig,
-              max_peels: int = 1_000_000):
+              max_peels: int = 1_000_000, plan=None):
     """reduce → peel-one-per-PE → repeat until globally empty (§6)."""
     V = aux.gid.shape[0]
 
     def body(carry):
         state, it, _ = carry
-        state, _ = _reduce_to_fixpoint(state, aux, ctx, cfg)
+        state, _ = _reduce_to_fixpoint(state, aux, ctx, cfg, plan=plan)
         active = state.status == UNDECIDED
         eact = active[aux.row] & active[aux.col]
         aw = jnp.where(active, state.w, 0)
@@ -149,18 +153,19 @@ def _rnp_loop(state, aux, ctx: Ctx, cfg: DisReduConfig,
     return state
 
 
-def run_algorithm(state, aux, ctx: Ctx, cfg: DisReduConfig, algo: str):
+def run_algorithm(state, aux, ctx: Ctx, cfg: DisReduConfig, algo: str,
+                  plan=None):
     """algo ∈ {reduce, greedy, rg, rnp} → final state (all local decided for
     solver algos; kernel remains for 'reduce')."""
     if algo == "reduce":
-        state, _ = _reduce_to_fixpoint(state, aux, ctx, cfg)
+        state, _ = _reduce_to_fixpoint(state, aux, ctx, cfg, plan=plan)
     elif algo == "greedy":
         state = _greedy_rounds(state, aux, ctx)
     elif algo == "rg":
-        state, _ = _reduce_to_fixpoint(state, aux, ctx, cfg)
+        state, _ = _reduce_to_fixpoint(state, aux, ctx, cfg, plan=plan)
         state = _greedy_rounds(state, aux, ctx)
     elif algo == "rnp":
-        state = _rnp_loop(state, aux, ctx, cfg)
+        state = _rnp_loop(state, aux, ctx, cfg, plan=plan)
     else:
         raise ValueError(f"unknown algo {algo!r}")
     return state
@@ -193,19 +198,21 @@ def _union_ctx(prob: UnionProblem) -> Ctx:
 @functools.partial(
     jax.jit,
     static_argnames=("algo", "heavy_k", "use_heavy", "sweeps", "max_rounds",
-                     "p", "fused"),
+                     "p", "schedule", "backend"),
 )
-def _solve_union_jit(w0, is_local, is_ghost, aux, halo, *, algo, heavy_k,
-                     use_heavy, sweeps, max_rounds, p, fused=False):
-    prob = UnionProblem(w0, is_local, is_ghost, aux, halo, p, 0)
+def _solve_union_jit(w0, is_local, is_ghost, aux, halo, plan, *, algo,
+                     heavy_k, use_heavy, sweeps, max_rounds, p,
+                     schedule="cheap", backend="jnp"):
+    prob = UnionProblem(w0, is_local, is_ghost, aux, halo, p, 0, plan)
     cfg = DisReduConfig(
         heavy_k=heavy_k, use_heavy=use_heavy,
         mode="sync" if sweeps >= 1_000_000 else "async",
-        stale_sweeps=sweeps, max_rounds=max_rounds, fused_sweeps=fused,
+        stale_sweeps=sweeps, max_rounds=max_rounds, schedule=schedule,
+        backend=backend,
     )
     ctx = _union_ctx(prob)
     state = R.init_state(w0, is_local, is_ghost)
-    state = run_algorithm(state, aux, ctx, cfg, algo)
+    state = run_algorithm(state, aux, ctx, cfg, algo, plan=plan)
     members = R.reconstruct_members(state, aux)
     return state, members
 
@@ -220,12 +227,13 @@ def solve(
     algo: 'greedy' (GS/GA), 'rg' (RGS/RGA), 'rnp' (RnPS/RnPA) — the S/A
     flavour is chosen by cfg.mode ('sync'/'async').
     """
-    prob = build_union_problem(pg)
+    prob = build_union_problem(pg, cfg.backend)
     state, in_set = _solve_union_jit(
         prob.w0, prob.is_local, prob.is_ghost, prob.aux, prob.halo,
+        prob.plan,
         algo=algo, heavy_k=cfg.heavy_k, use_heavy=cfg.use_heavy,
         sweeps=cfg.sweeps_per_round, max_rounds=cfg.max_rounds, p=prob.p,
-        fused=cfg.fused_sweeps,
+        schedule=cfg.schedule, backend=cfg.backend,
     )
     members = np.zeros(pg.n_global, dtype=bool)
     sel = np.asarray(in_set) & np.asarray(prob.is_local)
@@ -269,7 +277,7 @@ def solve_compact(
     pre_cfg = DisReduConfig(
         heavy_k=cfg.heavy_k, use_heavy=cfg.use_heavy, mode=cfg.mode,
         stale_sweeps=cfg.stale_sweeps, exchange=cfg.exchange,
-        fused_sweeps=cfg.fused_sweeps, max_rounds=pre_rounds,
+        schedule=cfg.schedule, backend=cfg.backend, max_rounds=pre_rounds,
     )
     state, prob, rounds = disredu(pg, pre_cfg)
     nv, ne = kernel_stats(pg, state)
@@ -321,27 +329,11 @@ def solver_shard_map_fn(pg: PartitionedGraph, cfg: DisReduConfig, mesh,
     """Build the shard_map'd solver over stacked [p, ...] arrays."""
     from jax.sharding import PartitionSpec as P
 
-    arrs = pg.device_arrays()
+    arrs = shard_map_arrays(pg, cfg)
     keys = list(arrs.keys())
-    L, G = pg.L, pg.G
 
     def per_pe(*args):
-        a = dict(zip(keys, [x.reshape(x.shape[1:]) for x in args]))
-        aux = R.Aux(
-            row=a["row"], col=a["col"], gid=a["gid"],
-            is_local=a["is_local"], is_iface=a["is_iface"],
-            owner_rank=a["owner_pe"], window=a["window"],
-            win_complete=a["win_complete"], win_adj_bits=a["win_adj_bits"],
-            edge_common=a["edge_common"],
-        )
-        halo = X.Halo(
-            iface_slots=a["iface_slots"],
-            ghost_vertex=L + jnp.arange(G, dtype=jnp.int32),
-            ghost_owner_pe=jnp.maximum(a["owner_pe"][L : L + G], 0),
-            ghost_owner_slot=a["ghost_owner_slot"],
-            ghost_valid=a["is_ghost"][L : L + G],
-            send_slot=a["send_slot"], recv_ghost=a["recv_ghost"],
-        )
+        aux, halo, plan, a = _unpack_per_pe(pg, keys, args)
 
         def exch(state):
             return X.exchange_shmap(
@@ -360,7 +352,7 @@ def solver_shard_map_fn(pg: PartitionedGraph, cfg: DisReduConfig, mesh,
 
         ctx = Ctx(exchange=exch, gany=gany, peel=peel)
         state = R.init_state(a["w0"], a["is_local"], a["is_ghost"])
-        state = run_algorithm(state, aux, ctx, cfg, algo)
+        state = run_algorithm(state, aux, ctx, cfg, algo, plan=plan)
         members = R.reconstruct_members(state, aux)
         ex = lambda t: t.reshape((1,) + t.shape)
         return (ex(state.w), ex(state.status), ex(members),
@@ -368,10 +360,7 @@ def solver_shard_map_fn(pg: PartitionedGraph, cfg: DisReduConfig, mesh,
 
     in_specs = tuple(P(axis) for _ in keys)
     out_specs = (P(axis),) * 5
-    fn = jax.shard_map(
-        per_pe, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False,
-    )
+    fn = shard_map_compat(per_pe, mesh, in_specs, out_specs)
 
     def run(arrays=None):
         arrays = arrays or {k: jnp.asarray(v) for k, v in arrs.items()}
@@ -388,32 +377,15 @@ def sweep_probe_shard_map_fn(pg: PartitionedGraph, cfg: DisReduConfig, mesh,
     cost_analysis of this probe is exact (no hidden loop bodies)."""
     from jax.sharding import PartitionSpec as P
 
-    arrs = pg.device_arrays()
+    arrs = shard_map_arrays(pg, cfg)
     keys = list(arrs.keys())
-    L, G = pg.L, pg.G
 
     def per_pe(*args):
-        a = dict(zip(keys, [x.reshape(x.shape[1:]) for x in args]))
-        aux = R.Aux(
-            row=a["row"], col=a["col"], gid=a["gid"],
-            is_local=a["is_local"], is_iface=a["is_iface"],
-            owner_rank=a["owner_pe"], window=a["window"],
-            win_complete=a["win_complete"], win_adj_bits=a["win_adj_bits"],
-            edge_common=a["edge_common"],
-        )
-        halo = X.Halo(
-            iface_slots=a["iface_slots"],
-            ghost_vertex=L + jnp.arange(G, dtype=jnp.int32),
-            ghost_owner_pe=jnp.maximum(a["owner_pe"][L : L + G], 0),
-            ghost_owner_slot=a["ghost_owner_slot"],
-            ghost_valid=a["is_ghost"][L : L + G],
-            send_slot=a["send_slot"], recv_ghost=a["recv_ghost"],
-        )
+        aux, halo, plan, a = _unpack_per_pe(pg, keys, args)
         state = R.init_state(a["w0"], a["is_local"], a["is_ghost"])
-        if cfg.fused_sweeps:
-            state = R.sweep_cheap_fused(state, aux)
-        else:
-            state = R.sweep_cheap(state, aux)
+        state = E.sweep(
+            state, aux, schedule=cfg.schedule, backend=cfg.backend, plan=plan
+        )
         if cfg.use_heavy:
             state = R.rule_heavy_vertex(state, aux, cfg.heavy_k)
         state, _ = X.exchange_shmap(
@@ -422,11 +394,8 @@ def sweep_probe_shard_map_fn(pg: PartitionedGraph, cfg: DisReduConfig, mesh,
         ex = lambda t: t.reshape((1,) + t.shape)
         return ex(state.w), ex(state.status), ex(state.offset)
 
-    fn = jax.shard_map(
-        per_pe, mesh=mesh,
-        in_specs=tuple(P(axis) for _ in keys),
-        out_specs=(P(axis),) * 3,
-        check_vma=False,
+    fn = shard_map_compat(
+        per_pe, mesh, tuple(P(axis) for _ in keys), (P(axis),) * 3
     )
 
     def run(arrays):

@@ -1,4 +1,4 @@
-"""Row-blocked segment-sum kernel (the SpMM/message-passing primitive).
+"""Row-blocked segment-reduction kernels (the SpMM/message-passing primitive).
 
 Layout: the host packs row-sorted COO edges into ``n_blocks`` row blocks of
 ``R_BLK`` output rows each; every block's edge range is padded to a fixed
@@ -14,6 +14,21 @@ TPU adaptation: the scatter-accumulate is expressed as a one-hot matmul
 dynamic-update-slices — the standard TPU trick for small-radix scatters.
 D should be lane-aligned (×128) and R_BLK sublane-aligned (×8) for full
 MXU utilization.
+
+Two entry points:
+
+  * ``segment_sum_blocked``   — the original sum-only kernel (float payloads;
+    message passing / embedding reductions),
+  * ``segment_fused_blocked`` — fused multi-payload sum + max + min in ONE
+    pass over the packed edge blocks.  This is the aggregate-engine hot path
+    (:mod:`repro.core.engine`): one sweep of the MWIS reduction rules needs
+    neighborhood sums (S, deg) AND maxes (M, argmax-id) over the same masked
+    edge list, so reading the blocked payloads once and producing all
+    reductions amortizes the HBM traffic that dominates this memory-bound op.
+    Sums use the one-hot MXU matmul; max/min use a static ``R_BLK``-unrolled
+    masked VPU reduction (max has no matmul form).  Integer payloads are
+    exact (addition over int32 is associative), so results are bit-identical
+    to ``jax.ops.segment_{sum,max,min}`` regardless of edge order.
 """
 
 from __future__ import annotations
@@ -62,3 +77,98 @@ def segment_sum_blocked(
         interpret=interpret,
     )(data, lrow[..., None])
     return out
+
+
+# --------------------------------------------------------------------- #
+# fused multi-payload sum/max/min
+# --------------------------------------------------------------------- #
+def _identity(dtype, kind: str):
+    """Reduction identities matching jax.ops.segment_* empty-segment init."""
+    if jnp.issubdtype(dtype, jnp.integer):
+        info = jnp.iinfo(dtype)
+        return {"max": info.min, "min": info.max}[kind]
+    return {"max": -jnp.inf, "min": jnp.inf}[kind]
+
+
+def _seg_fused_kernel(*refs, r_blk: int, has_sum: bool, has_max: bool,
+                      has_min: bool):
+    refs = list(refs)
+    dsum = refs.pop(0)[0] if has_sum else None      # [E_BLK, Ds]
+    dmax = refs.pop(0)[0] if has_max else None      # [E_BLK, Dm]
+    dmin = refs.pop(0)[0] if has_min else None      # [E_BLK, Dn]
+    lrow = refs.pop(0)[0][:, 0]                     # [E_BLK]
+    onehot = (
+        lrow[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, r_blk), 1)
+    )                                               # [E_BLK, R_BLK] bool
+    if has_sum:
+        osum_ref = refs.pop(0)
+        acc = jnp.int32 if jnp.issubdtype(dsum.dtype, jnp.integer) \
+            else jnp.float32
+        osum_ref[0] = jax.lax.dot_general(
+            onehot.astype(dsum.dtype), dsum,
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=acc,
+        ).astype(osum_ref.dtype)
+    # max/min have no matmul form: unroll the (small, static) R_BLK axis and
+    # reduce each output row's masked payload slice on the VPU.
+    if has_max:
+        omax_ref = refs.pop(0)
+        ident = _identity(dmax.dtype, "max")
+        omax_ref[0] = jnp.stack(
+            [jnp.max(jnp.where(onehot[:, r : r + 1], dmax, ident), axis=0)
+             for r in range(r_blk)], axis=0,
+        )
+    if has_min:
+        omin_ref = refs.pop(0)
+        ident = _identity(dmin.dtype, "min")
+        omin_ref[0] = jnp.stack(
+            [jnp.min(jnp.where(onehot[:, r : r + 1], dmin, ident), axis=0)
+             for r in range(r_blk)], axis=0,
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("r_blk", "interpret"))
+def segment_fused_blocked(
+    data_sum: jax.Array | None,   # [n_blocks, E_BLK, Ds] or None
+    data_max: jax.Array | None,   # [n_blocks, E_BLK, Dm] or None
+    data_min: jax.Array | None,   # [n_blocks, E_BLK, Dn] or None
+    lrow: jax.Array,              # [n_blocks, E_BLK] int32 (R_BLK = padding)
+    *,
+    r_blk: int,
+    interpret: bool = False,
+):
+    """One pass over the packed blocks; returns (sum, max, min) outputs of
+    shape [n_blocks, R_BLK, D*] (None for absent payload groups)."""
+    payloads = [p for p in (data_sum, data_max, data_min) if p is not None]
+    if not payloads:
+        raise ValueError("segment_fused_blocked needs at least one payload")
+    n_blocks, e_blk = payloads[0].shape[:2]
+    in_specs, args, out_specs, out_shapes = [], [], [], []
+    for p in payloads:
+        in_specs.append(pl.BlockSpec((1, e_blk, p.shape[2]),
+                                     lambda i: (i, 0, 0)))
+        args.append(p)
+        out_specs.append(pl.BlockSpec((1, r_blk, p.shape[2]),
+                                      lambda i: (i, 0, 0)))
+        out_shapes.append(
+            jax.ShapeDtypeStruct((n_blocks, r_blk, p.shape[2]), p.dtype)
+        )
+    in_specs.append(pl.BlockSpec((1, e_blk, 1), lambda i: (i, 0, 0)))
+    args.append(lrow[..., None])
+    outs = pl.pallas_call(
+        functools.partial(
+            _seg_fused_kernel, r_blk=r_blk,
+            has_sum=data_sum is not None, has_max=data_max is not None,
+            has_min=data_min is not None,
+        ),
+        grid=(n_blocks,),
+        in_specs=in_specs,
+        out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
+        out_shape=out_shapes if len(out_shapes) > 1 else out_shapes[0],
+        interpret=interpret,
+    )(*args)
+    outs = list(outs) if isinstance(outs, (list, tuple)) else [outs]
+    res = []
+    for p in (data_sum, data_max, data_min):
+        res.append(outs.pop(0) if p is not None else None)
+    return tuple(res)

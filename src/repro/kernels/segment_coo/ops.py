@@ -1,4 +1,4 @@
-"""Public segment-sum API with host-side CSR→blocked-ELL packing and
+"""Public segment-reduction API with host-side CSR→blocked-ELL packing and
 pallas/jnp dispatch."""
 
 from __future__ import annotations
@@ -10,8 +10,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import interpret_mode, use_pallas
-from repro.kernels.segment_coo.kernel import segment_sum_blocked
-from repro.kernels.segment_coo.ref import segment_sum_blocked_ref
+from repro.kernels.segment_coo.kernel import (
+    segment_fused_blocked, segment_sum_blocked,
+)
+from repro.kernels.segment_coo.ref import (
+    segment_fused_blocked_ref, segment_sum_blocked_ref,
+)
 
 
 def pack_blocks(
@@ -19,7 +23,8 @@ def pack_blocks(
 ) -> Tuple[np.ndarray, np.ndarray, int]:
     """Host packing: row-sorted edge ids → (edge_perm [n_blocks, E_BLK],
     lrow [n_blocks, E_BLK]).  edge_perm indexes the original edge array;
-    padding slots point at edge 0 with lrow = r_blk (ignored)."""
+    padding slots point at edge 0 with lrow = r_blk (ignored) — so the edge
+    array must be non-empty (the partitioned graphs always pad E ≥ 1)."""
     order = np.argsort(row, kind="stable")
     rs = row[order]
     n_blocks = (n_rows + r_blk - 1) // r_blk
@@ -35,6 +40,25 @@ def pack_blocks(
         k = starts[b + 1] - starts[b]
         edge_perm[b, :k] = order[sl]
         lrow[b, :k] = rs[sl] - b * r_blk
+    return edge_perm, lrow, e_blk
+
+
+def pack_blocks_stacked(
+    rows: np.ndarray, n_rows: int, *, r_blk: int = 8,
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Stacked packing for the shard_map path: rows is [p, E]; every PE is
+    packed against the same n_rows and padded to a SHARED E_BLK (max over
+    PEs) so the per-PE plan arrays stack into one [p, n_blocks, E_BLK]
+    mesh-sharded input."""
+    p = rows.shape[0]
+    packed = [pack_blocks(rows[i], n_rows, r_blk=r_blk) for i in range(p)]
+    e_blk = max(pb[2] for pb in packed)
+    n_blocks = packed[0][0].shape[0]
+    edge_perm = np.zeros((p, n_blocks, e_blk), dtype=np.int64)
+    lrow = np.full((p, n_blocks, e_blk), r_blk, dtype=np.int32)
+    for i, (perm_i, lrow_i, eb_i) in enumerate(packed):
+        edge_perm[i, :, :eb_i] = perm_i
+        lrow[i, :, :eb_i] = lrow_i
     return edge_perm, lrow, e_blk
 
 
@@ -60,3 +84,43 @@ def segment_sum_coo(
     else:
         out = segment_sum_blocked_ref(blocked, lrow, r_blk=r_blk)
     return out.reshape(n_blocks * r_blk, -1)[:n_rows]
+
+
+def segment_fused_coo(
+    edge_perm: jax.Array,   # [n_blocks, E_BLK] from pack_blocks
+    lrow: jax.Array,        # [n_blocks, E_BLK]
+    n_rows: int,
+    *,
+    data_sum: jax.Array | None = None,   # [E, Ds] edge payloads to sum
+    data_max: jax.Array | None = None,   # [E, Dm] edge payloads to max
+    data_min: jax.Array | None = None,   # [E, Dn] edge payloads to min
+    r_blk: int = 8,
+    force_pallas: bool | None = None,
+):
+    """Fused blocked segment sum+max+min over one packed edge list; returns
+    a (sum, max, min) tuple of [n_rows, D*] arrays (None where the payload
+    group is absent).  All payload groups share the single gather of the
+    blocked edge permutation — the engine's one-pass-per-sweep contract."""
+    if data_sum is None and data_max is None and data_min is None:
+        raise ValueError("segment_fused_coo needs at least one payload")
+    n_blocks, e_blk = edge_perm.shape
+
+    def gather(data):
+        if data is None:
+            return None
+        return data[edge_perm.reshape(-1)].reshape(
+            n_blocks, e_blk, data.shape[-1]
+        )
+
+    bsum, bmax, bmin = gather(data_sum), gather(data_max), gather(data_min)
+    enable = use_pallas() if force_pallas is None else force_pallas
+    if enable:
+        outs = segment_fused_blocked(
+            bsum, bmax, bmin, lrow, r_blk=r_blk, interpret=interpret_mode()
+        )
+    else:
+        outs = segment_fused_blocked_ref(bsum, bmax, bmin, lrow, r_blk=r_blk)
+    return tuple(
+        o.reshape(n_blocks * r_blk, -1)[:n_rows] if o is not None else None
+        for o in outs
+    )

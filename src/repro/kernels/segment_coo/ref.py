@@ -19,3 +19,28 @@ def segment_sum_blocked_ref(data: jax.Array, lrow: jax.Array, *,
 def segment_sum_ref(data: jax.Array, seg: jax.Array, n: int) -> jax.Array:
     """Plain CSR/COO segment sum (canonical semantics)."""
     return jax.ops.segment_sum(data, seg, num_segments=n)
+
+
+def segment_fused_blocked_ref(
+    data_sum: jax.Array | None,
+    data_max: jax.Array | None,
+    data_min: jax.Array | None,
+    lrow: jax.Array,
+    *,
+    r_blk: int,
+):
+    """Oracle for the fused sum/max/min kernel: per-block jax.ops reductions
+    (segment r_blk collects the padding lanes and is sliced off)."""
+
+    def blocked(op, data):
+        if data is None:
+            return None
+        return jax.vmap(
+            lambda db, lb: op(db, lb, num_segments=r_blk + 1)[:r_blk]
+        )(data, lrow)
+
+    return (
+        blocked(jax.ops.segment_sum, data_sum),
+        blocked(jax.ops.segment_max, data_max),
+        blocked(jax.ops.segment_min, data_min),
+    )

@@ -28,6 +28,11 @@ def main() -> None:
                     choices=("allgather", "a2a"))
     ap.add_argument("--window-cap", type=int, default=16)
     ap.add_argument("--heavy-k", type=int, default=8)
+    ap.add_argument("--schedule", default="cheap",
+                    help="named rule schedule (repro.core.engine.SCHEDULES)")
+    ap.add_argument("--backend", default="jnp",
+                    choices=("jnp", "blocked", "pallas"),
+                    help="aggregate backend for the rule-test reductions")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--compare-seq", action="store_true")
     ap.add_argument("--bfs-relabel", action="store_true",
@@ -47,7 +52,8 @@ def main() -> None:
     print(f"partition: p={args.p} L={pg.L} G={pg.G} E={pg.E} "
           f"B={pg.B} ({time.time() - t0:.2f}s)")
     cfg = D.DisReduConfig(
-        heavy_k=args.heavy_k, mode=args.mode, exchange=args.exchange
+        heavy_k=args.heavy_k, mode=args.mode, exchange=args.exchange,
+        schedule=args.schedule, backend=args.backend,
     )
 
     if args.algo == "reduce":

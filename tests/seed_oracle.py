@@ -1,73 +1,27 @@
-"""Vectorized masked reduction rules — the paper's §4.3 in JAX array form.
+"""Frozen seed-PR reduction rules — the parity oracle for the aggregate engine.
 
-Every rule is evaluated for *all* vertices of a PE's local subgraph at once
-(segment reductions over the edge list + static capped neighbor windows),
-instead of the per-vertex worklist of a sequential CPU reducer.  This is the
-TPU-native re-expression of the paper's observation that the rules "act very
-locally": locality means each test is a bounded neighborhood aggregate, i.e.
-exactly a masked segment op.
+This file is a verbatim copy of ``src/repro/core/rules.py`` as of the seed
+commit (plus a seed-faithful union-path driver at the bottom), kept so the
+engine refactor can be proven *bit-identical* to the original per-rule and
+fused sweep paths long after those branches were deleted from the live code.
+Do NOT "fix" or modernise this module: its value is that it never changes.
 
-Batching soundness.  A sequential reducer applies one rule at a time; a
-vectorized sweep fires many applications simultaneously, which is unsound
-without care (two adjacent vertices both passing an include test must not
-both be included; two vertices excluding each other via symmetric
-single-edge certificates would lose the optimum).  We restore soundness
-with deterministic priority filters (global vertex id = the paper's
-PE-rank/ID tie-breaking generalised to every rule):
-
-  * include rules   — candidates are accepted only if they beat every
-    candidate neighbor (accepted set is independent; include rules are
-    monotone under deletion of other accepted vertices, so a batch equals
-    some sequential order).
-  * exclude rules   — a vertex is excluded only if its certificate vertex
-    has *higher* priority; certificate chains therefore strictly ascend and
-    the standard rerouting argument (any solution using an excluded vertex
-    can be rerouted toward higher-priority certificates) terminates.
-  * weight transfer — accepted folds must be the unique candidate within
-    two hops, so their closed neighborhoods are disjoint and the batched
-    weight decrements cannot race.
-
-Ghost semantics follow the distributed reduction model (Def. 4.1):
-ghost weights are upper bounds (Lemma 4.2), neighborhoods are supersets
-(Lemma 4.3); every test below is monotone in the right direction so stale
-border data only ever makes a rule *more conservative*, never unsound.
-Interface-vertex includes are proposals (Remark 4.6); conflict resolution
-happens in the exchange step (:mod:`repro.core.distributed`).
-
-Aggregate-declaration contract (see ARCHITECTURE.md): every rule *declares*
-the neighborhood aggregates its TEST needs via ``@_requires(...)`` and
-receives them in a :class:`SweepCtx` — rules never issue their own segment
-reductions for tests.  The aggregate engine (:mod:`repro.core.engine`)
-computes the union of the scheduled rules' requirements and dispatches the
-segment reductions through a pluggable backend (jnp or the Pallas
-blocked-ELL kernels).  Rule *applications* (scatters, certificate activity)
-always read fresh status — those stay inline here.
+  * ``sweep_cheap``       — seed per-rule path (every rule recomputes its
+    aggregates fresh; the seed's ``fused_sweeps=False`` default),
+  * ``sweep_cheap_fused`` — seed fused path (aggregates snapshotted once per
+    sweep; the seed's ``fused_sweeps=True``),
+  * ``disredu_union_oracle`` — the seed DisRedu{S,A} round loop on the union
+    layout, importing only modules this PR does not touch (exchange).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.ops import segment_max, segment_sum
-
-
-def _requires(*aggs: str):
-    """Declare which SweepCtx aggregates a rule's test consumes."""
-    unknown = set(aggs) - set(SweepCtx._fields)
-    if unknown:
-        raise ValueError(
-            f"unknown aggregate(s) {sorted(unknown)}; "
-            f"SweepCtx fields are {SweepCtx._fields}"
-        )
-
-    def deco(fn):
-        fn.requires = frozenset(aggs)
-        return fn
-
-    return deco
 
 UNDECIDED, INCLUDED, EXCLUDED, FOLDED = 0, 1, 2, 3
 LOG_FOLD1, LOG_WT = 1, 2
@@ -187,37 +141,55 @@ def _log_append(
 
 
 class SweepCtx(NamedTuple):
-    """Rule-test aggregates, produced by the engine's pluggable backend.
+    """Aggregates snapshotted once per sweep (fused-sweep mode).
 
-    The engine (:mod:`repro.core.engine`) fills exactly the fields the
-    scheduled rules declared via ``@_requires`` — undeclared fields are
-    ``None``, so a rule reading past its declaration fails loudly.
-
-    Staleness soundness (EXPERIMENTS.md §Perf H3): when the schedule
-    snapshots aggregates once per sweep, adjacency is static and
-    weights/activity only decrease, so snapshot aggregates are upper bounds
-    of their fresh values — every rule test is monotone in the safe
+    Soundness of staleness (EXPERIMENTS.md §Perf H3): adjacency is static
+    and weights/activity only decrease, so snapshot aggregates are upper
+    bounds of their fresh values — every rule test is monotone in the safe
     direction.  Rule *applications* and certificate activity always use
     fresh status (recomputed eact), so cross-family conflicts inside one
     sweep cannot arise."""
 
-    S: Optional[jax.Array]         # [V] neighborhood weight sums
-    deg: Optional[jax.Array]       # [V] active degrees
-    M: Optional[jax.Array]         # [V] max neighbor weight
-    only: Optional[jax.Array]      # [V] the unique active neighbor (deg-1)
-    act_bits: Optional[jax.Array]  # [V] window active bits
-    clique: Optional[jax.Array]    # [V] active window forms a clique
+    S: jax.Array         # [V] neighborhood weight sums
+    deg: jax.Array       # [V] active degrees
+    M: jax.Array         # [V] max neighbor weight
+    only: jax.Array      # [V] the unique active neighbor (deg-1 vertices)
+    act_bits: jax.Array  # [V] window active bits
+    clique: jax.Array    # [V] active window forms a clique
+
+
+def compute_ctx(state: RedState, aux: Aux) -> SweepCtx:
+    V = state.w.shape[0]
+    active = _active(state)
+    eact = _edge_active(aux, active)
+    aw = _aw(state, active)
+    S = _nbr_sum(aux, eact, aw, V)
+    deg = _act_deg(aux, eact, V)
+    M = _nbr_max(aux, eact, state.w, V)
+    only = jnp.maximum(
+        segment_max(jnp.where(eact, aux.col, -1), aux.row, num_segments=V), 0
+    )
+    act_bits = _window_active_bits(state, aux)
+    clique = _is_clique(state, aux, act_bits)
+    return SweepCtx(S=S, deg=deg, M=M, only=only, act_bits=act_bits,
+                    clique=clique)
 
 
 # --------------------------------------------------------------------- #
 # rule: degree zero / one  (Meta rule + Remark 4.8, fold form of Gu et al.)
 # --------------------------------------------------------------------- #
-@_requires("deg", "only")
-def rule_degree_one(state: RedState, aux: Aux, ctx: SweepCtx) -> RedState:
+def rule_degree_one(state: RedState, aux: Aux, ctx: "SweepCtx" = None) -> RedState:
     V = state.w.shape[0]
     active = _active(state)
     eact = _edge_active(aux, active)
-    deg, only = ctx.deg, ctx.only
+    if ctx is None:
+        deg = _act_deg(aux, eact, V)
+        only = segment_max(
+            jnp.where(eact, aux.col, -1), aux.row, num_segments=V
+        )
+        only = jnp.maximum(only, 0)
+    else:
+        deg, only = ctx.deg, ctx.only
     w_u = state.w[only]
 
     # (a) isolated vertices
@@ -257,13 +229,14 @@ def rule_degree_one(state: RedState, aux: Aux, ctx: SweepCtx) -> RedState:
 # --------------------------------------------------------------------- #
 # rule: Dist. Neighborhood Removal (Reduction 4.3)
 # --------------------------------------------------------------------- #
-@_requires("S")
 def rule_neighborhood_removal(state: RedState, aux: Aux,
-                              ctx: SweepCtx) -> RedState:
+                              ctx: "SweepCtx" = None) -> RedState:
     V = state.w.shape[0]
     active = _active(state)
     eact = _edge_active(aux, active)
-    s = ctx.S
+    s = ctx.S if ctx is not None else _nbr_sum(
+        aux, eact, _aw(state, active), V
+    )
     cand = aux.is_local & active & (state.w >= s)
     acc = _accept_independent(aux, eact, cand, V)
     return _apply_include(state, aux, eact, acc)
@@ -305,12 +278,17 @@ def _is_clique(state: RedState, aux: Aux, act_bits: jax.Array) -> jax.Array:
 # --------------------------------------------------------------------- #
 # rule: Distributed Simplicial Vertex (Reduction 4.4)
 # --------------------------------------------------------------------- #
-@_requires("clique", "M")
-def rule_simplicial(state: RedState, aux: Aux, ctx: SweepCtx) -> RedState:
+def rule_simplicial(state: RedState, aux: Aux,
+                    ctx: "SweepCtx" = None) -> RedState:
     V = state.w.shape[0]
     active = _active(state)
     eact = _edge_active(aux, active)
-    clique, m = ctx.clique, ctx.M
+    if ctx is None:
+        act_bits = _window_active_bits(state, aux)
+        clique = _is_clique(state, aux, act_bits)
+        m = _nbr_max(aux, eact, state.w, V)
+    else:
+        act_bits, clique, m = ctx.act_bits, ctx.clique, ctx.M
     cand = (
         aux.is_local & active & aux.win_complete & clique & (state.w >= m)
     )
@@ -321,14 +299,19 @@ def rule_simplicial(state: RedState, aux: Aux, ctx: SweepCtx) -> RedState:
 # --------------------------------------------------------------------- #
 # rule: Dist. Simplicial Weight Transfer (Reduction 4.5)
 # --------------------------------------------------------------------- #
-@_requires("clique", "M", "deg")
 def rule_weight_transfer(state: RedState, aux: Aux,
-                         ctx: SweepCtx) -> RedState:
+                         ctx: "SweepCtx" = None) -> RedState:
     V = state.w.shape[0]
     D = aux.window.shape[1]
     active = _active(state)
     eact = _edge_active(aux, active)
-    clique, m, deg = ctx.clique, ctx.M, ctx.deg
+    if ctx is None:
+        act_bits = _window_active_bits(state, aux)
+        clique = _is_clique(state, aux, act_bits)
+        m = _nbr_max(aux, eact, state.w, V)
+        deg = _act_deg(aux, eact, V)
+    else:
+        act_bits, clique, m, deg = ctx.act_bits, ctx.clique, ctx.M, ctx.deg
 
     # v must be max-weight among the simplicial vertices of N(v).  A neighbor
     # whose simpliciality we cannot decide (incomplete window) blocks v.
@@ -356,7 +339,7 @@ def rule_weight_transfer(state: RedState, aux: Aux,
 
     # apply the fold: remove X = {u in N[v]: w(u) <= w(v)}, transfer weight.
     # entry activity here must be FRESH (application, not test)
-    fresh_bits = _window_active_bits(state, aux)
+    fresh_bits = act_bits if ctx is None else _window_active_bits(state, aux)
     wv = state.w
     tgt = aux.window  # [V, D]
     ent_active = ((fresh_bits[:, None] >> jnp.arange(D)[None, :]) & 1) == 1
@@ -364,11 +347,10 @@ def rule_weight_transfer(state: RedState, aux: Aux,
     excl_upd = accb & ent_active & (state.w[tgt] <= wv[:, None])
     dec_upd = accb & ent_active & (state.w[tgt] > wv[:, None])
     nil_slot = V - 1
-    # plain EXCLUDED fill: non-accepted slots scatter onto the nil slot,
-    # which is EXCLUDED by invariant, so the unconditional value is safe
     status = state.status.at[jnp.where(excl_upd, tgt, nil_slot)].set(
-        jnp.int8(EXCLUDED)
+        jnp.where(excl_upd, jnp.int8(EXCLUDED), jnp.int8(EXCLUDED))
     )
+    # (scatter writes EXCLUDED either way; nil slot is EXCLUDED by invariant)
     status = jnp.where(acc, jnp.int8(FOLDED), status)
     w = state.w.at[jnp.where(dec_upd, tgt, nil_slot)].add(
         jnp.where(dec_upd, -wv[:, None], 0)
@@ -385,14 +367,13 @@ def rule_weight_transfer(state: RedState, aux: Aux,
 # --------------------------------------------------------------------- #
 # rule: Distributed Basic Single-Edge (Reduction 4.6)
 # --------------------------------------------------------------------- #
-@_requires("S")
 def rule_basic_single_edge(state: RedState, aux: Aux,
-                           ctx: SweepCtx) -> RedState:
+                           ctx: "SweepCtx" = None) -> RedState:
     V = state.w.shape[0]
     active = _active(state)
     eact = _edge_active(aux, active)
     aw = _aw(state, active)
-    s = ctx.S
+    s = ctx.S if ctx is not None else _nbr_sum(aux, eact, aw, V)
     # capped common-neighborhood weight (lower bound => conservative)
     c = jnp.where(
         active[aux.edge_common], aw[aux.edge_common], 0
@@ -415,14 +396,13 @@ def rule_basic_single_edge(state: RedState, aux: Aux,
 # --------------------------------------------------------------------- #
 # rule: Dist. Extended Single-Edge (Reduction 4.7)
 # --------------------------------------------------------------------- #
-@_requires("S")
 def rule_extended_single_edge(state: RedState, aux: Aux,
-                              ctx: SweepCtx) -> RedState:
+                              ctx: "SweepCtx" = None) -> RedState:
     V = state.w.shape[0]
     active = _active(state)
     eact = _edge_active(aux, active)
     aw = _aw(state, active)
-    s = ctx.S
+    s = ctx.S if ctx is not None else _nbr_sum(aux, eact, aw, V)
     # edge e = (v=row, u=col):  w(v) >= S(v) - aw(u)  => exclude common nbrs
     test = (
         eact
@@ -495,6 +475,36 @@ def rule_heavy_vertex(state: RedState, aux: Aux, heavy_k: int = 8) -> RedState:
     return _apply_include(state, aux, eact, acc)
 
 
+# --------------------------------------------------------------------- #
+# sweep drivers
+# --------------------------------------------------------------------- #
+CHEAP_RULES = (
+    rule_degree_one,
+    rule_neighborhood_removal,
+    rule_weight_transfer,
+    rule_simplicial,
+    rule_basic_single_edge,
+    rule_extended_single_edge,
+)
+
+
+def sweep_cheap(state: RedState, aux: Aux) -> RedState:
+    """One pass of the cheap rule families, in the paper's §5.1 order."""
+    for rule in CHEAP_RULES:
+        state = rule(state, aux)
+    return state
+
+
+def sweep_cheap_fused(state: RedState, aux: Aux) -> RedState:
+    """Fused sweep: the expensive aggregates (S, deg, M, clique bits) are
+    computed ONCE per sweep and shared by all rule families (§Perf H3) —
+    tests become conservatively stale, applications stay fresh."""
+    ctx = compute_ctx(state, aux)
+    for rule in CHEAP_RULES:
+        state = rule(state, aux, ctx)
+    return state
+
+
 def reconstruct_members(state: RedState, aux: Aux) -> jax.Array:
     """Replay the fold log in reverse; returns [V] bool membership.
 
@@ -516,3 +526,88 @@ def reconstruct_members(state: RedState, aux: Aux) -> jax.Array:
         return in_set.at[v].set(val)
 
     return jax.lax.fori_loop(0, state.log_n, body, in_set)
+
+
+# --------------------------------------------------------------------- #
+# seed-faithful drivers (union path) — mirror the seed's local_reduce and
+# _disredu_union_jit exactly, parameterised only by the seed's fused flag.
+# --------------------------------------------------------------------- #
+def local_reduce_oracle(
+    state: RedState, aux: Aux, *, heavy_k: int = 8, use_heavy: bool = True,
+    max_sweeps: int = 10_000, fused: bool = False,
+) -> RedState:
+    sweep = sweep_cheap_fused if fused else sweep_cheap
+
+    def body(carry):
+        state, _ = carry
+        state = state._replace(changed=jnp.zeros((), bool))
+        state = sweep(state, aux)
+        if use_heavy:
+            state = jax.lax.cond(
+                state.changed,
+                lambda s: s,
+                lambda s: rule_heavy_vertex(s, aux, heavy_k),
+                state,
+            )
+        return state, carry[1] + 1
+
+    def cond(carry):
+        state, it = carry
+        return state.changed & (it < max_sweeps)
+
+    state = state._replace(changed=jnp.ones((), bool))
+    state, _ = jax.lax.while_loop(
+        cond, body, (state, jnp.zeros((), jnp.int32))
+    )
+    return state
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("heavy_k", "use_heavy", "sweeps", "max_rounds", "p",
+                     "fused"),
+)
+def _disredu_union_oracle_jit(
+    w0, is_local, is_ghost, aux, halo, *, heavy_k, use_heavy, sweeps,
+    max_rounds, p, fused
+):
+    from repro.core import exchange as X
+
+    state0 = init_state(w0, is_local, is_ghost)
+
+    def body(carry):
+        state, rounds, _ = carry
+        snap_s, snap_w = state.status, state.w
+        state = local_reduce_oracle(
+            state, aux, heavy_k=heavy_k, use_heavy=use_heavy,
+            max_sweeps=sweeps, fused=fused,
+        )
+        state, _ = X.exchange_union(state, aux, halo, p=p)
+        changed = (state.status != snap_s).any() | (state.w != snap_w).any()
+        return state, rounds + 1, changed
+
+    def cond(carry):
+        _, rounds, changed = carry
+        return changed & (rounds < max_rounds)
+
+    state, rounds, _ = jax.lax.while_loop(
+        cond, body, (state0, jnp.zeros((), jnp.int32), jnp.ones((), bool))
+    )
+    return state, rounds
+
+
+def disredu_union_oracle(
+    pg, *, heavy_k: int = 8, use_heavy: bool = True, mode: str = "sync",
+    stale_sweeps: int = 2, max_rounds: int = 10_000, fused: bool = False,
+):
+    """Seed DisRedu{S,A} on the union layout; returns (state, rounds)."""
+    from repro.core.distributed import build_union_problem
+
+    prob = build_union_problem(pg)
+    sweeps = 1_000_000 if mode == "sync" else stale_sweeps
+    state, rounds = _disredu_union_oracle_jit(
+        prob.w0, prob.is_local, prob.is_ghost, prob.aux, prob.halo,
+        heavy_k=heavy_k, use_heavy=use_heavy, sweeps=sweeps,
+        max_rounds=max_rounds, p=prob.p, fused=fused,
+    )
+    return state, rounds

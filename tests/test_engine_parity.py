@@ -1,0 +1,121 @@
+"""Parity harness: the aggregate-engine path == the seed path, bit for bit.
+
+The engine refactor deleted the seed's per-rule aggregate recomputation
+branches from ``rules.py``; this harness proves nothing changed by running
+the full DisRedu{S,A} pipeline against the frozen seed implementation
+(``tests/seed_oracle.py``) on the generator-graph matrix and asserting the
+final ``status`` / ``w`` / ``offset`` arrays are **bit-identical**:
+
+  * engine schedule "cheap"       == seed per-rule path (fused_sweeps=False),
+  * engine schedule "cheap-fused" == seed fused path   (fused_sweeps=True),
+  * all aggregate backends (jnp / blocked / pallas-interpret) agree exactly
+    (int32 payloads — addition is associative, so layout cannot matter).
+
+The shard_map-path parity (same assertion across the production execution
+path) lives in ``tests/test_shardmap.py`` (multi-device subprocess).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import distributed as D
+from repro.core import partition as part
+from repro.graphs import generators as gen
+from tests import seed_oracle as O
+from tests.helpers import SMALL_PAD
+
+
+def _small_graphs():
+    """Brute-force-scale graphs sharing one compiled program (SMALL_PAD)."""
+    out = []
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(4, 13))
+        out.append((f"rand{seed}", gen.random_graph(n, 0.4, seed=seed)))
+    return out
+
+
+def _generator_graphs():
+    """One instance per paper generator family (laptop scale)."""
+    return [
+        ("rgg", gen.rgg2d(240, avg_deg=7, seed=1)),
+        ("rhg", gen.rhg_like(240, avg_deg=6, seed=2)),
+        ("gnm", gen.gnm(200, 600, seed=3)),
+    ]
+
+
+def _assert_bit_identical(state_engine, state_seed, label):
+    np.testing.assert_array_equal(
+        np.asarray(state_engine.status), np.asarray(state_seed.status),
+        err_msg=f"{label}: status diverged",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(state_engine.w), np.asarray(state_seed.w),
+        err_msg=f"{label}: weights diverged",
+    )
+    assert int(state_engine.offset) == int(state_seed.offset), \
+        f"{label}: offset diverged"
+
+
+def _run_matrix(schedule, fused, graphs, pad=None, ps=(1, 2)):
+    for name, g in graphs:
+        for p in ps:
+            for mode in ("sync", "async"):
+                pg = part.partition_graph(
+                    g, p, window_cap=8, common_cap=4, pad_to=pad
+                )
+                se, _, _ = D.disredu(pg, D.DisReduConfig(
+                    heavy_k=6, mode=mode, schedule=schedule
+                ))
+                so, _ = O.disredu_union_oracle(
+                    pg, heavy_k=6, mode=mode, fused=fused
+                )
+                _assert_bit_identical(
+                    se, so, f"{name}/p{p}/{mode}/{schedule}"
+                )
+
+
+def test_engine_cheap_matches_seed_per_rule_path_small():
+    _run_matrix("cheap", False, _small_graphs(), pad=SMALL_PAD)
+
+
+def test_engine_cheap_fused_matches_seed_fused_path_small():
+    _run_matrix("cheap-fused", True, _small_graphs(), pad=SMALL_PAD)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("schedule,fused", [
+    ("cheap", False), ("cheap-fused", True),
+])
+def test_engine_matches_seed_on_generator_matrix(schedule, fused):
+    _run_matrix(schedule, fused, _generator_graphs())
+
+
+@pytest.mark.parametrize("backend", ["blocked", "pallas"])
+def test_backends_bit_identical_to_jnp(backend):
+    """Blocked-ELL backends (ref + pallas interpret) == jnp, bit for bit."""
+    for name, g in _small_graphs():
+        pg = part.partition_graph(
+            g, 2, window_cap=8, common_cap=4, pad_to=SMALL_PAD
+        )
+        for schedule in ("cheap", "cheap-fused"):
+            sj, _, _ = D.disredu(pg, D.DisReduConfig(
+                heavy_k=6, schedule=schedule, backend="jnp"
+            ))
+            sb, _, _ = D.disredu(pg, D.DisReduConfig(
+                heavy_k=6, schedule=schedule, backend=backend
+            ))
+            _assert_bit_identical(sb, sj, f"{name}/{schedule}/{backend}")
+
+
+@pytest.mark.slow
+def test_blocked_backend_bit_identical_on_generator_graph():
+    g = gen.rgg2d(240, avg_deg=7, seed=4)
+    pg = part.partition_graph(g, 4, window_cap=8)
+    sj, _, _ = D.disredu(pg, D.DisReduConfig(
+        heavy_k=6, mode="async", schedule="cheap-fused", backend="jnp"
+    ))
+    sb, _, _ = D.disredu(pg, D.DisReduConfig(
+        heavy_k=6, mode="async", schedule="cheap-fused", backend="blocked"
+    ))
+    _assert_bit_identical(sb, sj, "rgg/p4/async/blocked")

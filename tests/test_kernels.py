@@ -7,9 +7,15 @@ import pytest
 
 from repro.kernels.embedding_bag.kernel import embedding_bag_fused
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
-from repro.kernels.segment_coo.kernel import segment_sum_blocked
-from repro.kernels.segment_coo.ops import pack_blocks, segment_sum_coo
-from repro.kernels.segment_coo.ref import segment_sum_blocked_ref
+from repro.kernels.segment_coo.kernel import (
+    segment_fused_blocked, segment_sum_blocked,
+)
+from repro.kernels.segment_coo.ops import (
+    pack_blocks, pack_blocks_stacked, segment_fused_coo, segment_sum_coo,
+)
+from repro.kernels.segment_coo.ref import (
+    segment_fused_blocked_ref, segment_sum_blocked_ref,
+)
 from repro.kernels.wedge_intersect.kernel import wedge_intersect
 from repro.kernels.wedge_intersect.ops import common_neighbor_stats
 from repro.kernels.wedge_intersect.ref import wedge_intersect_ref
@@ -48,6 +54,91 @@ def test_segment_coo_kernel_matches_ref(n_rows, n_edges, d, r_blk, dtype):
         np.asarray(got, np.float32), np.asarray(want, np.float32),
         rtol=tol, atol=tol,
     )
+
+
+@pytest.mark.parametrize("n_rows,n_edges,r_blk", [
+    # n_rows > n_edges leaves empty segments → exercises the identities
+    (17, 120, 8), (64, 9, 8), (33, 257, 16),
+])
+def test_segment_fused_kernel_matches_ref_int32(n_rows, n_edges, r_blk):
+    """Fused sum+max+min (interpret mode) == blocked ref == jax.ops, exactly
+    (int payloads — the aggregate-engine contract is bit-identity)."""
+    rng = np.random.default_rng(3)
+    row = rng.integers(0, n_rows, size=n_edges).astype(np.int32)
+    dsum = jnp.asarray(rng.integers(-500, 500, size=(n_edges, 2)), jnp.int32)
+    dmax = jnp.asarray(rng.integers(-500, 500, size=(n_edges, 2)), jnp.int32)
+    dmin = jnp.asarray(rng.integers(-500, 500, size=(n_edges, 1)), jnp.int32)
+    edge_perm, lrow, e_blk = pack_blocks(row, n_rows, r_blk=r_blk)
+
+    def blocked(d):
+        return d[jnp.asarray(edge_perm.reshape(-1))].reshape(
+            edge_perm.shape[0], e_blk, d.shape[-1]
+        )
+
+    out_k = segment_fused_blocked(
+        blocked(dsum), blocked(dmax), blocked(dmin), jnp.asarray(lrow),
+        r_blk=r_blk, interpret=True,
+    )
+    out_r = segment_fused_blocked_ref(
+        blocked(dsum), blocked(dmax), blocked(dmin), jnp.asarray(lrow),
+        r_blk=r_blk,
+    )
+    for k, r in zip(out_k, out_r):
+        np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+    # end-to-end wrapper (pallas-interpret) == canonical jax.ops semantics
+    got = segment_fused_coo(
+        jnp.asarray(edge_perm), jnp.asarray(lrow), n_rows,
+        data_sum=dsum, data_max=dmax, data_min=dmin,
+        r_blk=r_blk, force_pallas=True,
+    )
+    seg = jnp.asarray(row)
+    want = (
+        jax.ops.segment_sum(dsum, seg, num_segments=n_rows),
+        jax.ops.segment_max(dmax, seg, num_segments=n_rows),
+        jax.ops.segment_min(dmin, seg, num_segments=n_rows),
+    )
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_segment_fused_partial_payloads_and_ref_dispatch():
+    """Absent payload groups come back as None on both dispatch paths."""
+    rng = np.random.default_rng(4)
+    n_rows, n_edges = 23, 77
+    row = rng.integers(0, n_rows, size=n_edges).astype(np.int32)
+    dmax = jnp.asarray(rng.integers(0, 100, size=(n_edges, 3)), jnp.int32)
+    edge_perm, lrow, _ = pack_blocks(row, n_rows, r_blk=8)
+    want = jax.ops.segment_max(dmax, jnp.asarray(row), num_segments=n_rows)
+    for force in (True, False):
+        s, m, n = segment_fused_coo(
+            jnp.asarray(edge_perm), jnp.asarray(lrow), n_rows,
+            data_max=dmax, force_pallas=force,
+        )
+        assert s is None and n is None
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(want))
+
+
+def test_pack_blocks_stacked_shared_budget():
+    """Stacked packing pads every PE to one shared E_BLK and each PE's plan
+    reproduces its own per-PE packing semantics."""
+    rng = np.random.default_rng(5)
+    p, E, n_rows = 3, 64, 19
+    rows = rng.integers(0, n_rows, size=(p, E)).astype(np.int32)
+    perm, lrow, e_blk = pack_blocks_stacked(rows, n_rows, r_blk=8)
+    n_blocks = (n_rows + 8 - 1) // 8
+    assert perm.shape == lrow.shape == (p, n_blocks, e_blk)
+    for i in range(p):
+        data = jnp.asarray(
+            rng.integers(-9, 9, size=(E, 1)), jnp.int32
+        )
+        got, _, _ = segment_fused_coo(
+            jnp.asarray(perm[i]), jnp.asarray(lrow[i]), n_rows,
+            data_sum=data, force_pallas=False,
+        )
+        want = jax.ops.segment_sum(
+            data, jnp.asarray(rows[i]), num_segments=n_rows
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 @pytest.mark.parametrize("E,D,e_blk", [(100, 8, 32), (513, 16, 256), (7, 4, 8)])

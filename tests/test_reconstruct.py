@@ -1,0 +1,106 @@
+"""Round-trip property test for ``reconstruct_members``.
+
+Random small graphs → DisRedu to the fixpoint → solve the residual kernel
+exactly → replay the fold log — the reconstructed set must be independent
+and achieve ``offset`` + the kernel solution's weight + the weight of the
+rule-included vertices at their CURRENT (folded-down) weights (the paper's
+Theorems 4.x composed: fold bookkeeping loses nothing; include decisions
+carry their own weight, and any fold-decrement they absorbed is repaid by
+``offset``).  The corpus is chosen so both fold-log record kinds
+(LOG_FOLD1 degree-one folds and LOG_WT simplicial weight transfers)
+actually replay.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distributed as D
+from repro.core import partition as part
+from repro.core import rules as R
+from repro.core.bitset_mwis import mwis_exact
+from repro.core.graph import from_edge_list
+from repro.graphs import generators as gen
+from tests.helpers import SMALL_PAD
+
+
+def _fold_corpus():
+    """Graphs that exercise both fold-log record kinds plus random noise."""
+    cases = []
+    # paths: chains of degree-one folds (LOG_FOLD1)
+    cases.append(gen.path_graph(12, seed=0))
+    # triangle + pendant with a light simplicial center (LOG_WT)
+    cases.append(from_edge_list(
+        4, [(0, 1), (1, 2), (0, 2), (1, 3)],
+        np.array([3, 10, 4, 9], dtype=np.int32),
+    ))
+    # clique K4 with a light center vertex attached to all (LOG_WT)
+    cases.append(from_edge_list(
+        5,
+        [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3), (0, 4)],
+        np.array([2, 8, 9, 7, 6], dtype=np.int32),
+    ))
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(3, 13))
+        cases.append(gen.random_graph(n, float(rng.uniform(0.1, 0.6)),
+                                      seed=seed))
+    return cases
+
+
+def _round_trip(g, p):
+    """Reduce, solve the kernel exactly, replay; return (ok, log_kinds)."""
+    pg = part.partition_graph(g, p, window_cap=8, common_cap=4,
+                              pad_to=SMALL_PAD)
+    state, prob, _ = D.disredu(pg, D.DisReduConfig(heavy_k=6))
+    status = np.asarray(state.status)
+    w = np.asarray(state.w)
+    is_local = np.asarray(prob.is_local)
+    gids = np.asarray(prob.aux.gid)
+
+    # exact residual solve under the CURRENT (possibly folded-down) weights
+    alive = np.flatnonzero((status == R.UNDECIDED) & is_local)
+    alive_g = sorted(set(int(gids[i]) for i in alive))
+    remap = {gg: k for k, gg in enumerate(alive_g)}
+    row, col = np.asarray(prob.aux.row), np.asarray(prob.aux.col)
+    edges = set()
+    for e in range(row.shape[0]):
+        r, c = int(row[e]), int(col[e])
+        if gids[r] < 0 or gids[c] < 0:
+            continue
+        if status[r] == R.UNDECIDED and status[c] == R.UNDECIDED:
+            a, b = int(gids[r]), int(gids[c])
+            if a in remap and b in remap and a != b:
+                edges.add((min(remap[a], remap[b]), max(remap[a], remap[b])))
+    wts = np.zeros(len(alive_g), dtype=np.int64)
+    for i in alive:
+        wts[remap[int(gids[i])]] = w[i]
+    sub = from_edge_list(len(alive_g), sorted(edges), wts)
+    kernel_best, msub = mwis_exact(sub)
+
+    # seed the replay with the kernel decision, then replay the fold log
+    status2 = status.copy()
+    for i in range(status.shape[0]):
+        gg = int(gids[i])
+        if status[i] == R.UNDECIDED and gg in remap:
+            status2[i] = R.INCLUDED if msub[remap[gg]] else R.EXCLUDED
+    st2 = state._replace(status=jnp.asarray(status2))
+    members = D.members_global(pg, st2, prob.aux)
+
+    assert g.is_independent_set(members), "reconstructed set not independent"
+    got = g.set_weight(members)
+    included_w = int(w[(status == R.INCLUDED) & is_local].sum())
+    want = int(state.offset) + int(kernel_best) + included_w
+    assert got == want, \
+        f"round-trip weight {got} != offset+kernel+included {want}"
+
+    kinds = set(np.asarray(state.log_kind)[: int(state.log_n)].tolist())
+    return kinds
+
+
+def test_reconstruct_round_trip_covers_both_log_kinds():
+    seen = set()
+    for g in _fold_corpus():
+        for p in (1, 2):
+            seen |= _round_trip(g, p)
+    assert R.LOG_FOLD1 in seen, "corpus never exercised a degree-one fold"
+    assert R.LOG_WT in seen, "corpus never exercised a weight transfer"

@@ -60,3 +60,53 @@ def test_shard_map_matches_union_and_a2a_matches_allgather(tmp_path):
     out = json.loads(line[len("RESULT "):])
     # all three execution paths produce identical solution weights
     assert out["allgather"] == out["a2a"] == out["union"], out
+
+
+PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import distributed as D, partition as part
+    from repro.graphs import generators as gen
+    from repro.launch.mesh import make_host_mesh
+
+    g = gen.rgg2d(400, avg_deg=7, seed=5)
+    pg = part.partition_graph(g, 4, window_cap=8)
+    V = pg.V
+    for schedule, backend in (("cheap", "jnp"), ("cheap-fused", "blocked")):
+        for mode in ("sync", "async"):
+            cfg = D.DisReduConfig(heavy_k=6, mode=mode, schedule=schedule,
+                                  backend=backend)
+            mesh = make_host_mesh(4)
+            run, keys = D.disredu_shard_map_fn(pg, cfg, mesh, axis="pe")
+            w, status, _, _, _, _, offset, _ = run()
+            su, _, _ = D.disredu(pg, cfg)   # union path, same config
+            tag = f"{schedule}/{backend}/{mode}"
+            assert np.array_equal(
+                np.asarray(status), np.asarray(su.status).reshape(4, V)
+            ), f"status diverged: {tag}"
+            assert np.array_equal(
+                np.asarray(w), np.asarray(su.w).reshape(4, V)
+            ), f"weights diverged: {tag}"
+            assert int(np.asarray(offset).sum()) == int(su.offset), \\
+                f"offset diverged: {tag}"
+    print("PARITY OK")
+""")
+
+
+@pytest.mark.slow
+def test_shard_map_reduction_bit_identical_to_union():
+    """Engine path parity across execution paths: DisRedu{S,A} under
+    shard_map produces bit-identical per-PE status/w (and total offset) to
+    the union simulation, for both refresh granularities and backends."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(__file__), "..", "src"
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", PARITY_SCRIPT], capture_output=True,
+        text=True, env=env, timeout=1800,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "PARITY OK" in r.stdout

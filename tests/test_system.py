@@ -7,6 +7,7 @@ independent set whose weight equals the exact MWIS weight.
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import distributed as D
