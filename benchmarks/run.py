@@ -9,18 +9,23 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
-def _engine_bench(out_path: str) -> None:
+def _engine_bench(out_path: str, small: bool = False) -> None:
     from benchmarks.engine_bench import run_engine_bench
 
     try:
         from tests import seed_oracle
     except ImportError:
         seed_oracle = None
-    payload = run_engine_bench(out_path, seed_oracle=seed_oracle)
+    payload = run_engine_bench(out_path, seed_oracle=seed_oracle,
+                               small=small)
     for row in payload["results"]:
         for backend, us in row["per_sweep_us"].items():
             print(f"engine_sweep/{row['graph']}/{backend},{us:.1f},"
                   f"schedule={row['schedule']}", flush=True)
+        for kind in ("greedy_round_us", "rnp_round_us"):
+            for backend, us in row.get(kind, {}).items():
+                print(f"engine_{kind[:-3]}/{row['graph']}/{backend},"
+                      f"{us:.1f},schedule={row['schedule']}", flush=True)
     print(f"# wrote {out_path}", flush=True)
 
 
@@ -29,6 +34,9 @@ def main() -> None:
     ap.add_argument("--engine-only", action="store_true",
                     help="only the aggregate-engine sweep bench + "
                          "BENCH_engine.json")
+    ap.add_argument("--engine-small", action="store_true",
+                    help="CI-sized engine bench: one small cell, jnp + "
+                         "blocked + pallas-interpret, few reps")
     ap.add_argument("--skip-engine", action="store_true",
                     help="paper tables only, no BENCH_engine.json")
     ap.add_argument("--engine-out", default=os.path.join(
@@ -43,7 +51,7 @@ def main() -> None:
             for name, us, derived in bench():
                 print(f"{name},{us:.1f},{derived}", flush=True)
     if not args.skip_engine:
-        _engine_bench(args.engine_out)
+        _engine_bench(args.engine_out, small=args.engine_small)
 
 
 if __name__ == "__main__":

@@ -53,17 +53,25 @@ RECSYS_SHAPES: Dict[str, Dict[str, Any]] = {
 # `schedule` names the rule schedule (repro.core.engine.SCHEDULES) each cell
 # runs per round: the weak-scaling reduce cells take the fused hot path;
 # the RnP cell runs the cheaper windowless schedule between peels.
+# `seg_blk` is the per-cell blocked-ELL autotune table consumed at
+# plan-build time (engine.build_plan): `r_blk` fixes the row-block height
+# (None → measure-free autotune over engine.R_BLK_CANDIDATES); the edge
+# budget E_BLK follows from the packing, rounded up to engine.E_BLK_MULTIPLE
+# sublanes.  Weak-scaling cells are E/L = 8 with GNM-like degree skew, where
+# taller blocks average out the per-block edge-count max that sets E_BLK
+# (see BENCH_engine.json's per-candidate rows); the RnP strong-scaling cell
+# sweeps a shrinking kernel, where the smallest block wins.
 MWIS_SHAPES: Dict[str, Dict[str, Any]] = {
     # weak-scaling cells (paper §7): per-PE vertices/edges as on HoreKa
     "weak_1m": dict(kind="reduce", L=1 << 20, E=1 << 23, G=1 << 16,
                     B=1 << 16, S=1 << 10, D=16, Dc=4,
-                    schedule="cheap-fused"),
+                    schedule="cheap-fused", seg_blk=dict(r_blk=32)),
     "weak_4m": dict(kind="reduce", L=1 << 22, E=1 << 25, G=1 << 17,
                     B=1 << 17, S=1 << 11, D=16, Dc=4,
-                    schedule="cheap-fused"),
+                    schedule="cheap-fused", seg_blk=dict(r_blk=32)),
     "strong_128m": dict(kind="rnp", L=1 << 18, E=1 << 21, G=1 << 15,
                         B=1 << 15, S=1 << 10, D=16, Dc=4,
-                        schedule="edges-only"),
+                        schedule="edges-only", seg_blk=dict(r_blk=8)),
 }
 
 
@@ -392,12 +400,15 @@ def mwis_build(shape_name: str, mesh, fsdp,
     algo = "reduce" if meta["kind"] == "reduce" else "rnp"
     axis = tuple(mesh.axis_names)
     ov = overrides or {}
+    seg_blk = dict(meta.get("seg_blk", {}))
+    seg_blk.update(ov.get("seg_blk", {}))
     cfg = DisReduConfig(
         heavy_k=int(ov.get("heavy_k", 8)), mode="async", stale_sweeps=2,
         exchange=ov.get("exchange", "allgather"), max_rounds=64,
         schedule=str(ov.get("schedule", _mwis.rule_schedule(shape_name))),
         backend=str(ov.get("backend", "jnp")),
         use_heavy=bool(ov.get("use_heavy", True)),
+        r_blk=seg_blk.get("r_blk"),
     )
     if (overrides or {}).get("probe"):
         # loop-free probe: exactly one rule sweep + one halo exchange —

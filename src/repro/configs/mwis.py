@@ -9,8 +9,9 @@ Every shape cell carries a named **rule schedule** (an
 the weak-scaling reduce cells run the fused hot path ("cheap-fused"), the
 RnP cell runs the cheaper windowless schedule ("edges-only") between
 peels.  Override per run with ``overrides={"schedule": ..., "backend":
-...}``; backends pick the segment-reduction implementation (jnp portable,
-pallas blocked-ELL on TPU).
+..., "seg_blk": {...}}``; backends pick the segment-reduction
+implementation (jnp portable, pallas blocked-ELL on TPU) and ``seg_blk``
+the per-cell blocked-ELL block sizes (see ``base.MWIS_SHAPES``).
 """
 
 from __future__ import annotations

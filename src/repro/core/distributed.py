@@ -66,6 +66,8 @@ class DisReduConfig:
     schedule: str = "cheap"       # named rule schedule (engine.SCHEDULES)
     backend: str = "jnp"          # aggregate backend: jnp | blocked | pallas
     max_rounds: int = 10_000
+    r_blk: Optional[int] = None   # blocked-ELL row-block height; None =
+                                  # autotune at plan-build time (engine)
 
     @property
     def sweeps_per_round(self) -> int:
@@ -84,7 +86,8 @@ class UnionProblem(NamedTuple):
 
 
 def build_union_problem(
-    pg: PartitionedGraph, backend: str = "jnp"
+    pg: PartitionedGraph, backend: str = "jnp",
+    r_blk: Optional[int] = None,
 ) -> UnionProblem:
     """Stack all PEs into one block-diagonal graph with offset indices."""
     p, V = pg.p, pg.V
@@ -110,7 +113,11 @@ def build_union_problem(
         edge_common=jnp.asarray(edge_common),
     )
     halo = X.make_halo(pg, pe=None)
-    plan = None if backend == "jnp" else E.build_plan(row, p * V)
+    plan = None if backend == "jnp" else E.build_plan(
+        row, p * V, r_blk=r_blk,
+        col=col, gid=pg.gid.reshape(-1), window=window,
+        win_adj_bits=pg.win_adj_bits.reshape(p * V, -1),
+    )
     return UnionProblem(
         w0=jnp.asarray(pg.w0.reshape(-1)),
         is_local=jnp.asarray(pg.is_local.reshape(-1)),
@@ -128,7 +135,10 @@ def _round_union(state, prob: UnionProblem, cfg: DisReduConfig):
         max_sweeps=cfg.sweeps_per_round, schedule=cfg.schedule,
         backend=cfg.backend, plan=prob.plan,
     )
-    state, _ = X.exchange_union(state, prob.aux, prob.halo, p=prob.p)
+    state, _ = X.exchange_union(
+        state, prob.aux, prob.halo, p=prob.p,
+        backend=cfg.backend, plan=prob.plan,
+    )
     return state
 
 
@@ -171,7 +181,7 @@ def disredu(
     pg: PartitionedGraph, cfg: DisReduConfig = DisReduConfig()
 ) -> Tuple[R.RedState, UnionProblem, int]:
     """Run DisReduS/DisReduA on the union simulation path."""
-    prob = build_union_problem(pg, cfg.backend)
+    prob = build_union_problem(pg, cfg.backend, cfg.r_blk)
     state, rounds = _disredu_union_jit(
         prob.w0, prob.is_local, prob.is_ghost, prob.aux, prob.halo,
         prob.plan,
@@ -197,9 +207,18 @@ def shard_map_arrays(pg: PartitionedGraph, cfg: DisReduConfig):
                 "blocked-ELL plan; abstract (dry-run) graphs must use the "
                 "jnp backend" % (cfg.backend,)
             )
-        plan = E.build_plan_stacked(pg.row, pg.V)
+        plan = E.build_plan_stacked(
+            pg.row, pg.V, r_blk=cfg.r_blk,
+            cols=pg.col, gids=pg.gid, windows=pg.window,
+            win_adj_bits=pg.win_adj_bits,
+        )
         arrs["plan_perm"] = np.asarray(plan.edge_perm)
         arrs["plan_lrow"] = np.asarray(plan.lrow)
+        arrs["plan_wbits"] = np.asarray(plan.wbits)
+        arrs["plan_wnh"] = np.asarray(plan.wnh)
+        arrs["plan_rblk"] = np.zeros(
+            (pg.p, plan.r_blk, 0), dtype=np.int32
+        )
     return arrs
 
 
@@ -222,7 +241,11 @@ def _unpack_per_pe(pg: PartitionedGraph, keys, args):
         send_slot=a["send_slot"], recv_ghost=a["recv_ghost"],
     )
     plan = (
-        E.SegPlan(edge_perm=a["plan_perm"], lrow=a["plan_lrow"])
+        E.SegPlan(
+            edge_perm=a["plan_perm"], lrow=a["plan_lrow"],
+            rblk_tpl=a["plan_rblk"], wbits=a["plan_wbits"],
+            wnh=a["plan_wnh"],
+        )
         if "plan_perm" in a else None
     )
     return aux, halo, plan, a
@@ -250,7 +273,8 @@ def disredu_shard_map_fn(pg: PartitionedGraph, cfg: DisReduConfig, mesh,
                 backend=cfg.backend, plan=plan,
             )
             state, _ = X.exchange_shmap(
-                state, aux, halo, axis=axis, method=cfg.exchange
+                state, aux, halo, axis=axis, method=cfg.exchange,
+                backend=cfg.backend, plan=plan,
             )
             local_changed = (
                 (state.status != snap_s).any() | (state.w != snap_w).any()

@@ -1,4 +1,4 @@
-"""Aggregate engine — one pluggable backend for every rule-test aggregate.
+"""Aggregate engine — one pluggable backend for every segment reduction.
 
 The paper's reduction rules "act very locally": every rule *test* is a
 bounded neighborhood aggregate (sum / max over the masked edge list, plus
@@ -26,20 +26,40 @@ Three pieces:
         stale, applications stay fresh — see the SweepCtx docstring and
         ARCHITECTURE.md for the soundness argument).
 
-  * **backends** — the segment reductions behind the aggregates dispatch
-    through one of:
+  * **backends** — :func:`aggregate` is the single entry point for segment
+    reductions over the static edge list.  The rule sweep, the greedy /
+    reduce-and-peel solvers and the halo-exchange conflict resolution all
+    route through it:
 
-      - ``"jnp"``     — ``jax.ops.segment_*`` (portable; XLA sort-based),
+      - ``"jnp"``     — ``jax.ops.segment_*`` (portable; XLA sort-based;
+        the row array is sorted by partition construction, so the engine
+        passes ``indices_are_sorted``),
       - ``"blocked"`` — blocked-ELL layout via the precomputed
         :class:`SegPlan` packing, jnp per-block reference kernels,
       - ``"pallas"``  — the same blocked-ELL layout through the fused
         multi-payload Pallas kernel (`kernels/segment_coo`), one pass over
-        the packed edge blocks for all sum+max payloads (interpret mode off
-        TPU).
+        the packed edge blocks for all sum+max+min+bitwise-OR payloads
+        (interpret mode off TPU).
 
     All payloads are int32, and integer addition is associative, so all
     three backends are **bit-identical** — backend choice is purely a
     performance decision.
+
+Window bits through the edge pass.  The capped-window activity bits and the
+clique test are *also* edge-local: every window entry ``window[v, i]`` is by
+construction one of v's edges, so the static plan carries, per edge
+``(v, u)``, the window-position bit ``wbits = Σ_i [window[v,i]=u] << i`` and
+the clique-violation mask ``wnh = OR_i [window[v,i]=u] ~(adj_bits[v,i] |
+1<<i)``.  One bitwise-OR column pair in the fused pass then yields
+
+    act_bits(v) = OR_{u ∈ N(v) active} wbits(v,u)
+    clique(v)   = (act_bits(v) & OR_{u active} wnh(v,u)) == 0
+
+bit-identical to the seed's D-unrolled window gather loop (the ``need &
+~have`` test distributes over the OR), with zero extra traversals.  The jnp
+backend computes the same bits from the [V, D] window layout
+(:func:`repro.kernels.wedge_intersect.ops.window_active_bits`) — cheaper
+there than a sort-based segment pass.
 """
 
 from __future__ import annotations
@@ -49,12 +69,14 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.ops import segment_max
+from jax.ops import segment_max, segment_min, segment_sum
 
 from repro.core import rules as R
 from repro.kernels.segment_coo.ops import (
     pack_blocks, pack_blocks_stacked, segment_fused_coo,
 )
+from repro.kernels.segment_coo.ref import segment_or_ref
+from repro.kernels.wedge_intersect import ops as W
 
 I32_MIN = jnp.iinfo(jnp.int32).min
 
@@ -64,8 +86,14 @@ AGGREGATES = R.SweepCtx._fields
 #: Aggregate backends (see module docstring).
 BACKENDS = ("jnp", "blocked", "pallas")
 
-#: Row-block height of the blocked-ELL packing (sublane-aligned).
+#: Default row-block height of the blocked-ELL packing (sublane-aligned).
 R_BLK = 8
+
+#: Candidate row-block heights for plan-build-time autotuning.
+R_BLK_CANDIDATES = (8, 16, 32, 64)
+
+#: Edge-budget alignment of the packing (int32 sublane multiple).
+E_BLK_MULTIPLE = 8
 
 #: Rule registry: schedule entries name rules; order comes from Schedule.
 RULES = {
@@ -129,36 +157,224 @@ class SegPlan(NamedTuple):
     """Precomputed blocked-ELL packing of one (static) row array.
 
     Built host-side once per Aux; the jitted sweep only gathers through it.
+    ``rblk_tpl`` is a zero-size shape carrier so the (static) row-block
+    height survives jit tracing without extra static arguments; ``wbits`` /
+    ``wnh`` are the static per-edge window-position payloads that let the
+    fused pass emit act_bits/clique (None when the plan was built without
+    window structure).
     """
 
     edge_perm: jax.Array   # [n_blocks, E_BLK] i32 (stacked: [p, nb, E_BLK])
     lrow: jax.Array        # [n_blocks, E_BLK] i32
+    rblk_tpl: jax.Array    # [r_blk, 0] i32 — zero-size static shape carrier
+    wbits: Optional[jax.Array] = None  # [E] i32 window-position bits
+    wnh: Optional[jax.Array] = None    # [E] i32 clique-violation masks
+
+    @property
+    def r_blk(self) -> int:
+        return self.rblk_tpl.shape[0]
 
 
-def build_plan(row: np.ndarray, n_rows: int, *, r_blk: int = R_BLK) -> SegPlan:
-    """Pack one PE's (or the union graph's) row array."""
-    perm, lrow, _ = pack_blocks(np.asarray(row), n_rows, r_blk=r_blk)
+def autotune_r_blk(
+    row: np.ndarray, n_rows: int,
+    candidates: Tuple[int, ...] = R_BLK_CANDIDATES,
+) -> int:
+    """Pick the row-block height minimizing padded blocked-ELL traffic.
+
+    The edge budget E_BLK is the max edge count over row blocks, so skewed
+    degree distributions (GNM) blow up the padding at small R_BLK; larger
+    blocks average the skew out.  Cost model = total padded items
+    (n_blocks * E_BLK) — the HBM traffic this memory-bound op pays — with
+    ties broken toward the smaller R_BLK (cheaper one-hot matmul).
+
+    ``row`` may be stacked [p, E]: the cost then models the stacked
+    packing's SHARED edge budget (max of the per-PE maxima), matching
+    ``pack_blocks_stacked``.
+    """
+    rows = np.asarray(row)
+    if rows.ndim == 1:
+        rows = rows[None, :]
+    best_r, best_cost = candidates[0], None
+    for r in candidates:
+        n_blocks = max((n_rows + r - 1) // r, 1)
+        e_blk = max(
+            int(np.bincount(rows[i] // r, minlength=n_blocks)
+                .max(initial=1))
+            for i in range(rows.shape[0])
+        )
+        e_blk = ((max(e_blk, 1) + E_BLK_MULTIPLE - 1) // E_BLK_MULTIPLE) \
+            * E_BLK_MULTIPLE
+        cost = n_blocks * e_blk
+        if best_cost is None or cost < best_cost:
+            best_r, best_cost = r, cost
+    return best_r
+
+
+def _window_payloads(
+    row: np.ndarray, col: np.ndarray, gid: np.ndarray,
+    window: np.ndarray, win_adj_bits: np.ndarray,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Static per-edge window payloads (host-side, once per partition).
+
+    For edge (v, u): ``wbits`` ORs ``1 << i`` over every window position i
+    of v holding u; ``wnh`` ORs the matching clique-violation masks
+    ``~(win_adj_bits[v, i] | 1 << i)`` truncated to D bits (act_bits has no
+    higher bits, so the truncation never changes ``act_bits & wnh``).
+    Window entries are edge targets by construction (partition builds
+    windows from the first D edges per row), so the OR over a vertex's
+    edges recovers exactly the seed's window loop.
+    """
+    row = np.asarray(row, np.int64)
+    col = np.asarray(col, np.int64)
+    D = window.shape[1]
+    if D >= 32:
+        raise ValueError(f"window cap D={D} must fit int32 OR payloads")
+    mask_d = np.int32((1 << D) - 1)
+    ent = np.asarray(window, np.int64)[row]          # [E, D]
+    adj = np.asarray(win_adj_bits, np.int32)[row]    # [E, D]
+    gok = np.asarray(gid, np.int32)[col] >= 0
+    wbits = np.zeros(row.shape[0], np.int32)
+    wnh = np.zeros(row.shape[0], np.int32)
+    for i in range(D):
+        m = (ent[:, i] == col) & gok
+        wbits |= m.astype(np.int32) << i
+        wnh |= np.where(m, ~(adj[:, i] | np.int32(1 << i)) & mask_d, 0)
+    return wbits, wnh
+
+
+def build_plan(
+    row: np.ndarray, n_rows: int, *, r_blk: Optional[int] = R_BLK,
+    col: Optional[np.ndarray] = None, gid: Optional[np.ndarray] = None,
+    window: Optional[np.ndarray] = None,
+    win_adj_bits: Optional[np.ndarray] = None,
+) -> SegPlan:
+    """Pack one PE's (or the union graph's) row array.
+
+    ``r_blk=None`` autotunes the row-block height (see
+    :func:`autotune_r_blk`).  Passing the static window structure
+    (col/gid/window/win_adj_bits) additionally packs the act_bits/clique
+    payloads so the fused pass can emit the window bits.
+    """
+    if r_blk is None:
+        r_blk = autotune_r_blk(np.asarray(row), n_rows)
+    perm, lrow, _ = pack_blocks(
+        np.asarray(row), n_rows, r_blk=r_blk, e_blk_multiple=E_BLK_MULTIPLE
+    )
+    wbits = wnh = None
+    if window is not None:
+        wb, wn = _window_payloads(row, col, gid, window, win_adj_bits)
+        wbits, wnh = jnp.asarray(wb), jnp.asarray(wn)
     return SegPlan(
         edge_perm=jnp.asarray(perm, jnp.int32),
         lrow=jnp.asarray(lrow, jnp.int32),
+        rblk_tpl=jnp.zeros((r_blk, 0), jnp.int32),
+        wbits=wbits, wnh=wnh,
     )
 
 
 def build_plan_stacked(
-    rows: np.ndarray, n_rows: int, *, r_blk: int = R_BLK,
+    rows: np.ndarray, n_rows: int, *, r_blk: Optional[int] = R_BLK,
+    cols: Optional[np.ndarray] = None, gids: Optional[np.ndarray] = None,
+    windows: Optional[np.ndarray] = None,
+    win_adj_bits: Optional[np.ndarray] = None,
 ) -> SegPlan:
-    """Stacked [p, ...] plan for the shard_map path (shared E_BLK)."""
+    """Stacked [p, ...] plan for the shard_map path (shared E_BLK).
+
+    ``r_blk=None`` autotunes one shared height over all PEs' rows."""
+    rows = np.asarray(rows)
+    if r_blk is None:
+        r_blk = autotune_r_blk(rows, n_rows)
     perm, lrow, _ = pack_blocks_stacked(
-        np.asarray(rows), n_rows, r_blk=r_blk
+        rows, n_rows, r_blk=r_blk, e_blk_multiple=E_BLK_MULTIPLE
     )
+    wbits = wnh = None
+    if windows is not None:
+        p = rows.shape[0]
+        wb = np.zeros(rows.shape, np.int32)
+        wn = np.zeros(rows.shape, np.int32)
+        for i in range(p):
+            wb[i], wn[i] = _window_payloads(
+                rows[i], cols[i], gids[i], windows[i], win_adj_bits[i]
+            )
+        wbits, wnh = jnp.asarray(wb), jnp.asarray(wn)
     return SegPlan(
         edge_perm=jnp.asarray(perm, jnp.int32),
         lrow=jnp.asarray(lrow, jnp.int32),
+        rblk_tpl=jnp.zeros((r_blk, 0), jnp.int32),
+        wbits=wbits, wnh=wnh,
     )
 
 
 # --------------------------------------------------------------------- #
-# aggregate computation (the backend dispatch)
+# the one segment-reduction entry point (backend dispatch)
+# --------------------------------------------------------------------- #
+def aggregate(
+    seg: Optional[jax.Array],
+    n_rows: int,
+    *,
+    data_sum: Optional[jax.Array] = None,
+    data_max: Optional[jax.Array] = None,
+    data_min: Optional[jax.Array] = None,
+    data_or: Optional[jax.Array] = None,
+    or_nbits: int = 16,
+    backend: str = "jnp",
+    plan: Optional[SegPlan] = None,
+    indices_are_sorted: bool = True,
+) -> Tuple[Optional[jax.Array], ...]:
+    """Segment-reduce edge payloads to [n_rows] outputs on one backend.
+
+    Returns a ``(sum, max, min, or)`` tuple (None for absent groups); 1-D
+    payloads come back 1-D.  ``seg`` is the per-item segment id array,
+    needed by the jnp backend only (the blocked backends traverse through
+    the precomputed ``plan``; pass the plan's own row array as ``seg`` when
+    both may run).  ``num_segments`` is always the static ``n_rows`` —
+    every call site passes a Python int, so round-to-round shapes never
+    recompile.  ``indices_are_sorted`` defaults to True because every Aux
+    row array is sorted by partition construction (lexsort + nil-padding at
+    the top index; offsets keep the union concatenation sorted) — pass
+    False when reducing over anything else.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown aggregate backend {backend!r}")
+    groups = [data_sum, data_max, data_min, data_or]
+    if all(d is None for d in groups):
+        raise ValueError("aggregate needs at least one payload group")
+
+    squeeze = [d is not None and d.ndim == 1 for d in groups]
+    groups = [d[:, None] if d is not None and d.ndim == 1 else d
+              for d in groups]
+    d_sum, d_max, d_min, d_or = groups
+
+    if backend == "jnp":
+        if seg is None:
+            raise ValueError("backend 'jnp' needs the segment id array")
+        kw = dict(num_segments=n_rows, indices_are_sorted=indices_are_sorted)
+        outs = (
+            segment_sum(d_sum, seg, **kw) if d_sum is not None else None,
+            segment_max(d_max, seg, **kw) if d_max is not None else None,
+            segment_min(d_min, seg, **kw) if d_min is not None else None,
+            segment_or_ref(
+                d_or, seg, n_rows, nbits=or_nbits,
+                indices_are_sorted=indices_are_sorted,
+            ) if d_or is not None else None,
+        )
+    else:
+        if plan is None:
+            raise ValueError(f"backend {backend!r} needs a SegPlan")
+        outs = segment_fused_coo(
+            plan.edge_perm, plan.lrow, n_rows,
+            data_sum=d_sum, data_max=d_max, data_min=d_min, data_or=d_or,
+            or_nbits=or_nbits, r_blk=plan.r_blk,
+            force_pallas=(backend == "pallas"),
+        )
+    return tuple(
+        o[:, 0] if o is not None and sq else o
+        for o, sq in zip(outs, squeeze)
+    )
+
+
+# --------------------------------------------------------------------- #
+# aggregate computation (SweepCtx for the scheduled rules)
 # --------------------------------------------------------------------- #
 def compute_ctx(
     state: R.RedState,
@@ -171,71 +387,78 @@ def compute_ctx(
     """Compute exactly the requested aggregates into a SweepCtx.
 
     `requires` and `backend` are trace-static; `plan` is a traced pytree
-    (None for the jnp backend).
+    (None for the jnp backend).  On the blocked/pallas backends everything —
+    edge sums/maxes AND the window activity/clique bits — comes out of ONE
+    fused pass over the packed edge blocks.
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown aggregate backend {backend!r}")
     if backend != "jnp" and plan is None:
         raise ValueError(f"backend {backend!r} needs a SegPlan (got None)")
     V = state.w.shape[0]
+    D = aux.window.shape[1]
     active = R._active(state)
     eact = R._edge_active(aux, active)
     S = deg = M = only = act_bits = clique = None
 
     edge_req = requires & {"S", "deg", "M", "only"}
-    if edge_req and backend == "jnp":
-        if "S" in edge_req:
-            S = R._nbr_sum(aux, eact, R._aw(state, active), V)
-        if "deg" in edge_req:
-            deg = R._act_deg(aux, eact, V)
-        if "M" in edge_req:
-            M = R._nbr_max(aux, eact, state.w, V)
-        if "only" in edge_req:
-            only = jnp.maximum(
-                segment_max(
-                    jnp.where(eact, aux.col, -1), aux.row, num_segments=V
-                ),
-                0,
-            )
-    elif edge_req:
-        # blocked-ELL: ONE fused pass over the packed edge blocks computes
-        # every sum and max payload together (int32 => bit-identical to jnp)
-        sum_fields = [f for f in ("S", "deg") if f in edge_req]
-        max_fields = [f for f in ("M", "only") if f in edge_req]
-        payload = {
-            "S": lambda: jnp.where(eact, R._aw(state, active)[aux.col], 0),
-            "deg": lambda: eact.astype(jnp.int32),
-            "M": lambda: jnp.where(eact, state.w[aux.col], I32_MIN),
-            "only": lambda: jnp.where(eact, aux.col, -1),
-        }
-        data_sum = (
-            jnp.stack([payload[f]() for f in sum_fields], axis=1)
-            if sum_fields else None
-        )
-        data_max = (
-            jnp.stack([payload[f]() for f in max_fields], axis=1)
-            if max_fields else None
-        )
-        sums, maxs, _ = segment_fused_coo(
-            plan.edge_perm, plan.lrow, V,
-            data_sum=data_sum, data_max=data_max,
-            r_blk=R_BLK, force_pallas=(backend == "pallas"),
-        )
-        out = {}
-        for i, f in enumerate(sum_fields):
-            out[f] = sums[:, i]
-        for i, f in enumerate(max_fields):
-            out[f] = maxs[:, i]
-        S, deg = out.get("S"), out.get("deg")
-        if "M" in out:
-            M = jnp.maximum(out["M"], I32_MIN)
-        if "only" in out:
-            only = jnp.maximum(out["only"], 0)
+    need_bits = bool(requires & {"act_bits", "clique"})
+    payload = {
+        "S": lambda: jnp.where(eact, R._aw(state, active)[aux.col], 0),
+        "deg": lambda: eact.astype(jnp.int32),
+        "M": lambda: jnp.where(eact, state.w[aux.col], I32_MIN),
+        "only": lambda: jnp.where(eact, aux.col, -1),
+    }
+    sum_fields = [f for f in ("S", "deg") if f in edge_req]
+    max_fields = [f for f in ("M", "only") if f in edge_req]
+    data_sum = (
+        jnp.stack([payload[f]() for f in sum_fields], axis=1)
+        if sum_fields else None
+    )
+    data_max = (
+        jnp.stack([payload[f]() for f in max_fields], axis=1)
+        if max_fields else None
+    )
 
-    if "act_bits" in requires or "clique" in requires:
-        act_bits = R._window_active_bits(state, aux)
-    if "clique" in requires:
-        clique = R._is_clique(state, aux, act_bits)
+    data_or = None
+    if need_bits and backend != "jnp":
+        if plan.wbits is None:
+            raise ValueError(
+                "plan lacks window payloads; build it with the window "
+                "structure (col/gid/window/win_adj_bits) to compute "
+                "act_bits/clique on the blocked backends"
+            )
+        acol = active[aux.col]
+        data_or = jnp.where(
+            acol[:, None], jnp.stack([plan.wbits, plan.wnh], axis=1), 0
+        )
+
+    sums = maxs = ors = None
+    if data_sum is not None or data_max is not None or data_or is not None:
+        sums, maxs, _, ors = aggregate(
+            aux.row, V, data_sum=data_sum, data_max=data_max,
+            data_or=data_or, or_nbits=max(D, 1), backend=backend, plan=plan,
+        )
+    out = {}
+    for i, f in enumerate(sum_fields):
+        out[f] = sums[:, i]
+    for i, f in enumerate(max_fields):
+        out[f] = maxs[:, i]
+    S, deg = out.get("S"), out.get("deg")
+    if "M" in out:
+        M = jnp.maximum(out["M"], I32_MIN)
+    if "only" in out:
+        only = jnp.maximum(out["only"], 0)
+
+    if need_bits:
+        if backend == "jnp":
+            act_bits = W.window_active_bits(active, aux.gid, aux.window)
+            if "clique" in requires:
+                clique = W.window_clique_ok(act_bits, aux.win_adj_bits)
+        else:
+            act_bits = ors[:, 0]
+            if "clique" in requires:
+                clique = (act_bits & ors[:, 1]) == 0
     if "act_bits" not in requires:
         act_bits = None
     return R.SweepCtx(

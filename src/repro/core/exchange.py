@@ -26,12 +26,12 @@ Every function exists in two layouts driven by the same `reconcile` core:
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.ops import segment_max
 
+from repro.core import engine as E
 from repro.core import rules as R
 from repro.core.partition import PartitionedGraph
 
@@ -95,6 +95,9 @@ def reconcile(
     ghost_valid: jax.Array,
     gw: jax.Array,
     gs: jax.Array,
+    *,
+    backend: str = "jnp",
+    plan: Optional[E.SegPlan] = None,
 ) -> Tuple[R.RedState, jax.Array]:
     """Apply board-derived ghost weight/status updates.
 
@@ -102,6 +105,13 @@ def reconcile(
     isolated-equal-weight-edge case (Lemma 4.4); both sides deterministically
     keep the endpoint owned by the *smaller* rank (Lemma 4.5).
     Returns (state, changed).
+
+    All conflict reductions are keyed by ``aux.row`` — the sorted segment
+    axis the SegPlan packs — so they route through the same blocked pass as
+    the rule aggregates.  The partition stores both directions of every
+    edge, so the seed's col-keyed existence tests are re-expressed with
+    swapped endpoint payloads (identical booleans over a symmetric edge
+    set).  ``num_segments`` is the static V everywhere.
     """
     V = state.w.shape[0]
     nilv = V - 1
@@ -116,28 +126,34 @@ def reconcile(
     )
 
     status = state.status
-    my_rank_e = aux.owner_rank[aux.col]      # rank of the local endpoint
-    owner_rank_e = aux.owner_rank[aux.row]   # rank of the ghost endpoint
+    rank_r = aux.owner_rank[aux.row]
+    rank_c = aux.owner_rank[aux.col]
 
     # --- include-proposal conflicts over cut edges -------------------- #
     ghost_inc = bs == INCLUDED                       # [V] board says included
     prop_local = (status == INCLUDED) & aux.is_iface
-    conflict_e = (
-        ghost_inc[aux.row] & prop_local[aux.col] & (aux.gid[aux.row] >= 0)
+    # (a) local proposal v = row loses iff a proposing ghost neighbor's
+    #     owner has the smaller rank
+    v_lose_e = (
+        prop_local[aux.row] & ghost_inc[aux.col]
+        & (aux.gid[aux.col] >= 0) & (rank_c < rank_r)
     )
-    # local proposal loses iff the ghost's owner has the smaller rank
-    v_lose_e = conflict_e & (owner_rank_e < my_rank_e)
-    v_lose = segment_max(
-        v_lose_e.astype(jnp.int32), aux.col, num_segments=V
-    ) > 0
+    # (b) the ghost's proposal u = row loses iff our local proposal has the
+    #     smaller rank
+    u_lose_e = (
+        ghost_inc[aux.row] & prop_local[aux.col]
+        & (aux.gid[aux.row] >= 0) & (rank_c < rank_r)
+    )
+    _, losses, _, _ = E.aggregate(
+        aux.row, V,
+        data_max=jnp.stack([v_lose_e, u_lose_e], axis=1).astype(jnp.int32),
+        backend=backend, plan=plan,
+    )
+    v_lose = losses[:, 0] > 0
+    u_lose = losses[:, 1] > 0
     status = jnp.where(
         v_lose & (status == INCLUDED), jnp.int8(EXCLUDED), status
     )
-    # ghost's proposal loses iff we have the smaller rank
-    u_lose_e = conflict_e & (my_rank_e < owner_rank_e)
-    u_lose = segment_max(
-        u_lose_e.astype(jnp.int32), aux.row, num_segments=V
-    ) > 0
 
     # --- ghost status update ------------------------------------------ #
     is_ghost_slot = bs >= 0
@@ -157,12 +173,12 @@ def reconcile(
 
     # --- exclude local active neighbors of newly-included ghosts ------- #
     ginc_now = is_ghost_slot & (status2 == INCLUDED)
-    hit = segment_max(
-        (ginc_now[aux.row] & (status2[aux.col] == UNDECIDED)).astype(jnp.int32),
-        aux.col, num_segments=V,
-    ) > 0
+    _, hit_m, _, _ = E.aggregate(
+        aux.row, V, data_max=ginc_now[aux.col].astype(jnp.int32),
+        backend=backend, plan=plan,
+    )
     status3 = jnp.where(
-        hit & (status2 == UNDECIDED) & aux.is_local,
+        (hit_m > 0) & (status2 == UNDECIDED) & aux.is_local,
         jnp.int8(EXCLUDED), status2,
     )
 
@@ -185,6 +201,7 @@ def _board(state: R.RedState, iface_slots: jax.Array) -> Tuple[jax.Array, jax.Ar
 def exchange_shmap(
     state: R.RedState, aux: R.Aux, halo: Halo, *, axis: str = "pe",
     method: str = "allgather",
+    backend: str = "jnp", plan: Optional[E.SegPlan] = None,
 ) -> Tuple[R.RedState, jax.Array]:
     """Per-PE exchange with lax collectives (inside shard_map)."""
     bw, bs = _board(state, halo.iface_slots)
@@ -211,12 +228,14 @@ def exchange_shmap(
     else:
         raise ValueError(f"unknown exchange method {method!r}")
     return reconcile(
-        state, aux, halo.ghost_vertex, halo.ghost_valid, gw, gs
+        state, aux, halo.ghost_vertex, halo.ghost_valid, gw, gs,
+        backend=backend, plan=plan,
     )
 
 
 def exchange_union(
     state: R.RedState, aux: R.Aux, halo: Halo, *, p: int,
+    backend: str = "jnp", plan: Optional[E.SegPlan] = None,
 ) -> Tuple[R.RedState, jax.Array]:
     """Union-layout exchange: 'collectives' are plain indexing across the
     stacked [p, ...] halo (single-device simulation of the SPMD program)."""
@@ -232,4 +251,5 @@ def exchange_union(
         halo.ghost_vertex.reshape(-1),
         halo.ghost_valid.reshape(-1),
         gw.reshape(-1), gs.reshape(-1),
+        backend=backend, plan=plan,
     )

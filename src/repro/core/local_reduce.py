@@ -94,12 +94,17 @@ def _reduce_jit(w0, is_local, is_ghost, aux, plan, heavy_k, use_heavy,
 def reduce_single_pe(
     pg: PartitionedGraph, *, heavy_k: int = 8, use_heavy: bool = True,
     schedule: str = "cheap", backend: str = "jnp",
+    r_blk: int | None = None,
 ) -> Tuple[R.RedState, R.Aux]:
     """Single-PE (p must be 1) reduction — the sequential-semantics entry
     point used by tests and as the p=1 baseline of the scaling benches."""
     assert pg.p == 1, "reduce_single_pe expects an unpartitioned graph"
     aux = make_aux(pg, pe=0)
-    plan = None if backend == "jnp" else E.build_plan(pg.row[0], pg.V)
+    plan = None if backend == "jnp" else E.build_plan(
+        pg.row[0], pg.V, r_blk=r_blk,
+        col=pg.col[0], gid=pg.gid[0], window=pg.window[0],
+        win_adj_bits=pg.win_adj_bits[0],
+    )
     state = _reduce_jit(
         jnp.asarray(pg.w0[0]),
         jnp.asarray(pg.is_local[0]),

@@ -53,6 +53,8 @@ import jax
 import jax.numpy as jnp
 from jax.ops import segment_max, segment_sum
 
+from repro.kernels.wedge_intersect.ops import window_active_bits
+
 
 def _requires(*aggs: str):
     """Declare which SweepCtx aggregates a rule's test consumes."""
@@ -133,16 +135,6 @@ def _edge_active(aux: Aux, active: jax.Array) -> jax.Array:
 
 def _aw(state: RedState, active: jax.Array) -> jax.Array:
     return jnp.where(active, state.w, 0)
-
-
-def _nbr_sum(aux: Aux, eact: jax.Array, vals: jax.Array, V: int) -> jax.Array:
-    contrib = jnp.where(eact, vals[aux.col], 0)
-    return segment_sum(contrib, aux.row, num_segments=V)
-
-
-def _nbr_max(aux: Aux, eact: jax.Array, vals: jax.Array, V: int) -> jax.Array:
-    contrib = jnp.where(eact, vals[aux.col], I32_MIN)
-    return jnp.maximum(segment_max(contrib, aux.row, num_segments=V), I32_MIN)
 
 
 def _act_deg(aux: Aux, eact: jax.Array, V: int) -> jax.Array:
@@ -270,39 +262,6 @@ def rule_neighborhood_removal(state: RedState, aux: Aux,
 
 
 # --------------------------------------------------------------------- #
-# clique machinery shared by simplicial rules (static adjacency bits)
-# --------------------------------------------------------------------- #
-def _window_active_bits(state: RedState, aux: Aux) -> jax.Array:
-    """[V] i32 — bit i set iff window[v, i] is an UNDECIDED vertex."""
-    D = aux.window.shape[1]
-    active = _active(state)
-    bits = jnp.zeros(state.w.shape[0], jnp.int32)
-    for i in range(D):
-        ent = aux.window[:, i]
-        bits |= (active[ent] & (aux.gid[ent] >= 0)).astype(jnp.int32) << i
-    return bits
-
-
-def _is_clique(state: RedState, aux: Aux, act_bits: jax.Array) -> jax.Array:
-    """[V] bool — do the *active* window entries form a clique?
-
-    Exact when win_complete (window = full static neighbor list); the caller
-    must gate on win_complete.  Ghost pairs have no stored edge, so ≥2 active
-    ghost neighbors naturally fail — matching "a clique in G_i contains at
-    most one ghost".
-    """
-    D = aux.window.shape[1]
-    ok = jnp.ones(state.w.shape[0], bool)
-    for i in range(D):
-        need = act_bits & ~jnp.int32(1 << i)
-        have = aux.win_adj_bits[:, i]
-        active_i = (act_bits >> i) & 1
-        bad = (active_i == 1) & ((need & ~have) != 0)
-        ok &= ~bad
-    return ok
-
-
-# --------------------------------------------------------------------- #
 # rule: Distributed Simplicial Vertex (Reduction 4.4)
 # --------------------------------------------------------------------- #
 @_requires("clique", "M")
@@ -355,8 +314,9 @@ def rule_weight_transfer(state: RedState, aux: Aux,
     acc = cand & (aux.gid > m1) & (aux.gid >= m2)
 
     # apply the fold: remove X = {u in N[v]: w(u) <= w(v)}, transfer weight.
-    # entry activity here must be FRESH (application, not test)
-    fresh_bits = _window_active_bits(state, aux)
+    # entry activity here must be FRESH (application, not test): recompute
+    # from current status via the vectorized window helper, not from ctx
+    fresh_bits = window_active_bits(_active(state), aux.gid, aux.window)
     wv = state.w
     tgt = aux.window  # [V, D]
     ent_active = ((fresh_bits[:, None] >> jnp.arange(D)[None, :]) & 1) == 1

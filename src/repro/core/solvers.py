@@ -23,7 +23,6 @@ from typing import Callable, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.ops import segment_max
 
 from repro.core import engine as E
 from repro.core import exchange as X
@@ -76,38 +75,40 @@ def _reduce_to_fixpoint(state, aux, ctx: Ctx, cfg: DisReduConfig,
     return state, rounds
 
 
-def _greedy_rounds(state, aux, ctx: Ctx, max_rounds: int = 100_000):
-    """Weighted-Luby rounds until no vertex is UNDECIDED anywhere."""
+def greedy_step(state, aux, *, backend: str = "jnp", plan=None):
+    """One weighted-Luby round (no exchange): include every local active
+    vertex no active neighbor beats.
+
+    The seed's two reductions (max neighbor weight + min gid among the
+    argmaxes) collapse into ONE lexicographic beat test per edge — v wins
+    iff no neighbor u has (w[u], -gid[u]) lexicographically above
+    (w[v], -gid[v]) — so a greedy round costs a single pass through the
+    aggregate backend.  Gids are unique, hence this equals the seed's
+    (w > mw) | (w == mw & gid < mg) winner set bit for bit, which is the
+    ``sequential.solve_greedy`` oracle semantics.
+    """
     V = aux.gid.shape[0]
+    active = state.status == UNDECIDED
+    eact = active[aux.row] & active[aux.col]
+    wc, wr = state.w[aux.col], state.w[aux.row]
+    beat_e = eact & (
+        (wc > wr) | ((wc == wr) & (aux.gid[aux.col] < aux.gid[aux.row]))
+    )
+    _, beaten, _, _ = E.aggregate(
+        aux.row, V, data_max=beat_e.astype(jnp.int32),
+        backend=backend, plan=plan,
+    )
+    win = aux.is_local & active & (beaten <= 0)
+    return R._apply_include(state, aux, eact, win)
+
+
+def _greedy_rounds(state, aux, ctx: Ctx, max_rounds: int = 100_000,
+                   *, backend: str = "jnp", plan=None):
+    """Weighted-Luby rounds until no vertex is UNDECIDED anywhere."""
 
     def body(carry):
         state, rounds, _ = carry
-        active = state.status == UNDECIDED
-        eact = active[aux.row] & active[aux.col]
-        mw = jnp.maximum(
-            segment_max(
-                jnp.where(eact, state.w[aux.col], I32_MIN), aux.row,
-                num_segments=V,
-            ),
-            I32_MIN,
-        )
-        # tie-break matches the sequential oracle: smaller id wins on ties
-        big = jnp.iinfo(jnp.int32).max
-        mg = jnp.minimum(
-            jax.ops.segment_min(
-                jnp.where(
-                    eact & (state.w[aux.col] == mw[aux.row]),
-                    aux.gid[aux.col], big,
-                ),
-                aux.row, num_segments=V,
-            ),
-            big,
-        )
-        win = (
-            aux.is_local & active
-            & ((state.w > mw) | ((state.w == mw) & (aux.gid < mg)))
-        )
-        state = R._apply_include(state, aux, eact, win)
+        state = greedy_step(state, aux, backend=backend, plan=plan)
         state, _ = ctx.exchange(state)
         remaining = ctx.gany((aux.is_local & (state.status == UNDECIDED)).any())
         return state, rounds + 1, remaining
@@ -123,21 +124,28 @@ def _greedy_rounds(state, aux, ctx: Ctx, max_rounds: int = 100_000):
     return state
 
 
+def peel_score(state, aux, *, backend: str = "jnp", plan=None):
+    """[V] HtWIS peel score ω(N(v)) − ω(v) for local active vertices
+    (I32_MIN elsewhere), through the aggregate backend."""
+    V = aux.gid.shape[0]
+    active = state.status == UNDECIDED
+    eact = active[aux.row] & active[aux.col]
+    aw = jnp.where(active, state.w, 0)
+    s, _, _, _ = E.aggregate(
+        aux.row, V, data_sum=jnp.where(eact, aw[aux.col], 0),
+        backend=backend, plan=plan,
+    )
+    return jnp.where(aux.is_local & active, s - state.w, I32_MIN)
+
+
 def _rnp_loop(state, aux, ctx: Ctx, cfg: DisReduConfig,
               max_peels: int = 1_000_000, plan=None):
     """reduce → peel-one-per-PE → repeat until globally empty (§6)."""
-    V = aux.gid.shape[0]
 
     def body(carry):
         state, it, _ = carry
         state, _ = _reduce_to_fixpoint(state, aux, ctx, cfg, plan=plan)
-        active = state.status == UNDECIDED
-        eact = active[aux.row] & active[aux.col]
-        aw = jnp.where(active, state.w, 0)
-        s = jax.ops.segment_sum(
-            jnp.where(eact, aw[aux.col], 0), aux.row, num_segments=V
-        )
-        score = jnp.where(aux.is_local & active, s - state.w, I32_MIN)
+        score = peel_score(state, aux, backend=cfg.backend, plan=plan)
         state = ctx.peel(state, score)
         remaining = ctx.gany((aux.is_local & (state.status == UNDECIDED)).any())
         return state, it + 1, remaining
@@ -160,10 +168,12 @@ def run_algorithm(state, aux, ctx: Ctx, cfg: DisReduConfig, algo: str,
     if algo == "reduce":
         state, _ = _reduce_to_fixpoint(state, aux, ctx, cfg, plan=plan)
     elif algo == "greedy":
-        state = _greedy_rounds(state, aux, ctx)
+        state = _greedy_rounds(state, aux, ctx, backend=cfg.backend,
+                               plan=plan)
     elif algo == "rg":
         state, _ = _reduce_to_fixpoint(state, aux, ctx, cfg, plan=plan)
-        state = _greedy_rounds(state, aux, ctx)
+        state = _greedy_rounds(state, aux, ctx, backend=cfg.backend,
+                               plan=plan)
     elif algo == "rnp":
         state = _rnp_loop(state, aux, ctx, cfg, plan=plan)
     else:
@@ -174,11 +184,14 @@ def run_algorithm(state, aux, ctx: Ctx, cfg: DisReduConfig, algo: str,
 # --------------------------------------------------------------------- #
 # union instantiation (single-device SPMD simulation)
 # --------------------------------------------------------------------- #
-def _union_ctx(prob: UnionProblem) -> Ctx:
+def _union_ctx(prob: UnionProblem, backend: str = "jnp") -> Ctx:
     p, V = prob.p, prob.w0.shape[0] // prob.p
 
     def exch(state):
-        return X.exchange_union(state, prob.aux, prob.halo, p=p)
+        return X.exchange_union(
+            state, prob.aux, prob.halo, p=p,
+            backend=backend, plan=prob.plan,
+        )
 
     def peel(state, score):
         sc = score.reshape(p, V)
@@ -210,7 +223,7 @@ def _solve_union_jit(w0, is_local, is_ghost, aux, halo, plan, *, algo,
         stale_sweeps=sweeps, max_rounds=max_rounds, schedule=schedule,
         backend=backend,
     )
-    ctx = _union_ctx(prob)
+    ctx = _union_ctx(prob, backend)
     state = R.init_state(w0, is_local, is_ghost)
     state = run_algorithm(state, aux, ctx, cfg, algo, plan=plan)
     members = R.reconstruct_members(state, aux)
@@ -227,7 +240,7 @@ def solve(
     algo: 'greedy' (GS/GA), 'rg' (RGS/RGA), 'rnp' (RnPS/RnPA) — the S/A
     flavour is chosen by cfg.mode ('sync'/'async').
     """
-    prob = build_union_problem(pg, cfg.backend)
+    prob = build_union_problem(pg, cfg.backend, cfg.r_blk)
     state, in_set = _solve_union_jit(
         prob.w0, prob.is_local, prob.is_ghost, prob.aux, prob.halo,
         prob.plan,
@@ -337,7 +350,8 @@ def solver_shard_map_fn(pg: PartitionedGraph, cfg: DisReduConfig, mesh,
 
         def exch(state):
             return X.exchange_shmap(
-                state, aux, halo, axis=axis, method=cfg.exchange
+                state, aux, halo, axis=axis, method=cfg.exchange,
+                backend=cfg.backend, plan=plan,
             )
 
         def gany(x):
@@ -389,7 +403,8 @@ def sweep_probe_shard_map_fn(pg: PartitionedGraph, cfg: DisReduConfig, mesh,
         if cfg.use_heavy:
             state = R.rule_heavy_vertex(state, aux, cfg.heavy_k)
         state, _ = X.exchange_shmap(
-            state, aux, halo, axis=axis, method=cfg.exchange
+            state, aux, halo, axis=axis, method=cfg.exchange,
+            backend=cfg.backend, plan=plan,
         )
         ex = lambda t: t.reshape((1,) + t.shape)
         return ex(state.w), ex(state.status), ex(state.offset)

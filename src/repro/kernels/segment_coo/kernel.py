@@ -19,16 +19,21 @@ Two entry points:
 
   * ``segment_sum_blocked``   — the original sum-only kernel (float payloads;
     message passing / embedding reductions),
-  * ``segment_fused_blocked`` — fused multi-payload sum + max + min in ONE
-    pass over the packed edge blocks.  This is the aggregate-engine hot path
-    (:mod:`repro.core.engine`): one sweep of the MWIS reduction rules needs
-    neighborhood sums (S, deg) AND maxes (M, argmax-id) over the same masked
-    edge list, so reading the blocked payloads once and producing all
-    reductions amortizes the HBM traffic that dominates this memory-bound op.
-    Sums use the one-hot MXU matmul; max/min use a static ``R_BLK``-unrolled
-    masked VPU reduction (max has no matmul form).  Integer payloads are
+  * ``segment_fused_blocked`` — fused multi-payload sum + max + min +
+    bitwise-OR in ONE pass over the packed edge blocks.  This is the
+    aggregate-engine hot path (:mod:`repro.core.engine`): one sweep of the
+    MWIS reduction rules needs neighborhood sums (S, deg), maxes (M,
+    argmax-id) AND the capped-window activity/clique bitmasks over the same
+    masked edge list, so reading the blocked payloads once and producing all
+    reductions amortizes the HBM traffic that dominates this memory-bound
+    op.  Sums use the one-hot MXU matmul; max/min use a static
+    ``R_BLK``-unrolled masked VPU reduction (max has no matmul form).
+    Bitwise-OR payloads are decomposed into ``or_nbits`` 0/1 bitplanes and
+    pushed through the SAME one-hot matmul (OR == "count per bit > 0"), then
+    repacked — so the OR columns ride the MXU too.  Integer payloads are
     exact (addition over int32 is associative), so results are bit-identical
-    to ``jax.ops.segment_{sum,max,min}`` regardless of edge order.
+    to ``jax.ops.segment_{sum,max,min}`` / a per-segment ``np.bitwise_or``
+    regardless of edge order.
 """
 
 from __future__ import annotations
@@ -80,7 +85,7 @@ def segment_sum_blocked(
 
 
 # --------------------------------------------------------------------- #
-# fused multi-payload sum/max/min
+# fused multi-payload sum/max/min/or
 # --------------------------------------------------------------------- #
 def _identity(dtype, kind: str):
     """Reduction identities matching jax.ops.segment_* empty-segment init."""
@@ -90,25 +95,30 @@ def _identity(dtype, kind: str):
     return {"max": -jnp.inf, "min": jnp.inf}[kind]
 
 
-def _seg_fused_kernel(*refs, r_blk: int, has_sum: bool, has_max: bool,
-                      has_min: bool):
+def _seg_fused_kernel(*refs, r_blk: int, or_nbits: int, has_sum: bool,
+                      has_max: bool, has_min: bool, has_or: bool):
     refs = list(refs)
     dsum = refs.pop(0)[0] if has_sum else None      # [E_BLK, Ds]
     dmax = refs.pop(0)[0] if has_max else None      # [E_BLK, Dm]
     dmin = refs.pop(0)[0] if has_min else None      # [E_BLK, Dn]
+    dor = refs.pop(0)[0] if has_or else None        # [E_BLK, Do]
     lrow = refs.pop(0)[0][:, 0]                     # [E_BLK]
     onehot = (
         lrow[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, r_blk), 1)
     )                                               # [E_BLK, R_BLK] bool
+
+    def onehot_matmul(data, acc):
+        return jax.lax.dot_general(
+            onehot.astype(data.dtype), data,
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=acc,
+        )
+
     if has_sum:
         osum_ref = refs.pop(0)
         acc = jnp.int32 if jnp.issubdtype(dsum.dtype, jnp.integer) \
             else jnp.float32
-        osum_ref[0] = jax.lax.dot_general(
-            onehot.astype(dsum.dtype), dsum,
-            dimension_numbers=(((0,), (0,)), ((), ())),
-            preferred_element_type=acc,
-        ).astype(osum_ref.dtype)
+        osum_ref[0] = onehot_matmul(dsum, acc).astype(osum_ref.dtype)
     # max/min have no matmul form: unroll the (small, static) R_BLK axis and
     # reduce each output row's masked payload slice on the VPU.
     if has_max:
@@ -125,9 +135,27 @@ def _seg_fused_kernel(*refs, r_blk: int, has_sum: bool, has_max: bool,
             [jnp.min(jnp.where(onehot[:, r : r + 1], dmin, ident), axis=0)
              for r in range(r_blk)], axis=0,
         )
+    # bitwise OR: unpack each column into or_nbits 0/1 planes and reuse the
+    # one-hot matmul (OR over a segment == per-bit count > 0), then repack.
+    if has_or:
+        oor_ref = refs.pop(0)
+        n_or = dor.shape[1]
+        shifts = jax.lax.broadcasted_iota(jnp.int32, (1, or_nbits), 1)
+        planes = jnp.concatenate(
+            [(dor[:, c : c + 1] >> shifts) & 1 for c in range(n_or)],
+            axis=1,
+        )                                           # [E_BLK, Do * W] 0/1
+        counts = onehot_matmul(planes, jnp.int32)   # [R_BLK, Do * W]
+        oor_ref[0] = jnp.stack(
+            [((counts[:, c * or_nbits : (c + 1) * or_nbits] > 0)
+              .astype(jnp.int32) << shifts[0][None, :]).sum(axis=1)
+             for c in range(n_or)], axis=1,
+        ).astype(oor_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("r_blk", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("r_blk", "or_nbits", "interpret")
+)
 def segment_fused_blocked(
     data_sum: jax.Array | None,   # [n_blocks, E_BLK, Ds] or None
     data_max: jax.Array | None,   # [n_blocks, E_BLK, Dm] or None
@@ -135,11 +163,17 @@ def segment_fused_blocked(
     lrow: jax.Array,              # [n_blocks, E_BLK] int32 (R_BLK = padding)
     *,
     r_blk: int,
+    data_or: jax.Array | None = None,  # [n_blocks, E_BLK, Do] i32, values
+                                       # in [0, 2**or_nbits)
+    or_nbits: int = 16,
     interpret: bool = False,
 ):
-    """One pass over the packed blocks; returns (sum, max, min) outputs of
-    shape [n_blocks, R_BLK, D*] (None for absent payload groups)."""
-    payloads = [p for p in (data_sum, data_max, data_min) if p is not None]
+    """One pass over the packed blocks; returns (sum, max, min, or) outputs
+    of shape [n_blocks, R_BLK, D*] (None for absent payload groups)."""
+    if not 0 < or_nbits < 32:
+        raise ValueError(f"or_nbits must be in (0, 32), got {or_nbits}")
+    payloads = [p for p in (data_sum, data_max, data_min, data_or)
+                if p is not None]
     if not payloads:
         raise ValueError("segment_fused_blocked needs at least one payload")
     n_blocks, e_blk = payloads[0].shape[:2]
@@ -157,9 +191,9 @@ def segment_fused_blocked(
     args.append(lrow[..., None])
     outs = pl.pallas_call(
         functools.partial(
-            _seg_fused_kernel, r_blk=r_blk,
+            _seg_fused_kernel, r_blk=r_blk, or_nbits=or_nbits,
             has_sum=data_sum is not None, has_max=data_max is not None,
-            has_min=data_min is not None,
+            has_min=data_min is not None, has_or=data_or is not None,
         ),
         grid=(n_blocks,),
         in_specs=in_specs,
@@ -169,6 +203,6 @@ def segment_fused_blocked(
     )(*args)
     outs = list(outs) if isinstance(outs, (list, tuple)) else [outs]
     res = []
-    for p in (data_sum, data_max, data_min):
+    for p in (data_sum, data_max, data_min, data_or):
         res.append(outs.pop(0) if p is not None else None)
     return tuple(res)

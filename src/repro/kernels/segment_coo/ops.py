@@ -19,18 +19,20 @@ from repro.kernels.segment_coo.ref import (
 
 
 def pack_blocks(
-    row: np.ndarray, n_rows: int, *, r_blk: int = 8,
+    row: np.ndarray, n_rows: int, *, r_blk: int = 8, e_blk_multiple: int = 1,
 ) -> Tuple[np.ndarray, np.ndarray, int]:
     """Host packing: row-sorted edge ids → (edge_perm [n_blocks, E_BLK],
     lrow [n_blocks, E_BLK]).  edge_perm indexes the original edge array;
     padding slots point at edge 0 with lrow = r_blk (ignored) — so the edge
-    array must be non-empty (the partitioned graphs always pad E ≥ 1)."""
+    array must be non-empty (the partitioned graphs always pad E ≥ 1).
+    ``e_blk_multiple`` rounds the edge budget up (sublane alignment)."""
     order = np.argsort(row, kind="stable")
     rs = row[order]
     n_blocks = (n_rows + r_blk - 1) // r_blk
     blk_of_edge = rs // r_blk
     counts = np.bincount(blk_of_edge, minlength=n_blocks)
     e_blk = max(int(counts.max(initial=1)), 1)
+    e_blk = ((e_blk + e_blk_multiple - 1) // e_blk_multiple) * e_blk_multiple
     edge_perm = np.zeros((n_blocks, e_blk), dtype=np.int64)
     lrow = np.full((n_blocks, e_blk), r_blk, dtype=np.int32)
     starts = np.zeros(n_blocks + 1, dtype=np.int64)
@@ -44,14 +46,18 @@ def pack_blocks(
 
 
 def pack_blocks_stacked(
-    rows: np.ndarray, n_rows: int, *, r_blk: int = 8,
+    rows: np.ndarray, n_rows: int, *, r_blk: int = 8, e_blk_multiple: int = 1,
 ) -> Tuple[np.ndarray, np.ndarray, int]:
     """Stacked packing for the shard_map path: rows is [p, E]; every PE is
     packed against the same n_rows and padded to a SHARED E_BLK (max over
     PEs) so the per-PE plan arrays stack into one [p, n_blocks, E_BLK]
     mesh-sharded input."""
     p = rows.shape[0]
-    packed = [pack_blocks(rows[i], n_rows, r_blk=r_blk) for i in range(p)]
+    packed = [
+        pack_blocks(rows[i], n_rows, r_blk=r_blk,
+                    e_blk_multiple=e_blk_multiple)
+        for i in range(p)
+    ]
     e_blk = max(pb[2] for pb in packed)
     n_blocks = packed[0][0].shape[0]
     edge_perm = np.zeros((p, n_blocks, e_blk), dtype=np.int64)
@@ -94,14 +100,17 @@ def segment_fused_coo(
     data_sum: jax.Array | None = None,   # [E, Ds] edge payloads to sum
     data_max: jax.Array | None = None,   # [E, Dm] edge payloads to max
     data_min: jax.Array | None = None,   # [E, Dn] edge payloads to min
+    data_or: jax.Array | None = None,    # [E, Do] edge payloads to bitwise-OR
+    or_nbits: int = 16,                  # bit width of the OR payloads
     r_blk: int = 8,
     force_pallas: bool | None = None,
 ):
-    """Fused blocked segment sum+max+min over one packed edge list; returns
-    a (sum, max, min) tuple of [n_rows, D*] arrays (None where the payload
-    group is absent).  All payload groups share the single gather of the
-    blocked edge permutation — the engine's one-pass-per-sweep contract."""
-    if data_sum is None and data_max is None and data_min is None:
+    """Fused blocked segment sum+max+min+or over one packed edge list;
+    returns a (sum, max, min, or) tuple of [n_rows, D*] arrays (None where
+    the payload group is absent).  All payload groups share the single
+    gather of the blocked edge permutation — the engine's
+    one-pass-per-sweep contract."""
+    if all(d is None for d in (data_sum, data_max, data_min, data_or)):
         raise ValueError("segment_fused_coo needs at least one payload")
     n_blocks, e_blk = edge_perm.shape
 
@@ -112,14 +121,20 @@ def segment_fused_coo(
             n_blocks, e_blk, data.shape[-1]
         )
 
-    bsum, bmax, bmin = gather(data_sum), gather(data_max), gather(data_min)
+    bsum, bmax, bmin, bor = (
+        gather(data_sum), gather(data_max), gather(data_min), gather(data_or)
+    )
     enable = use_pallas() if force_pallas is None else force_pallas
     if enable:
         outs = segment_fused_blocked(
-            bsum, bmax, bmin, lrow, r_blk=r_blk, interpret=interpret_mode()
+            bsum, bmax, bmin, lrow, data_or=bor, or_nbits=or_nbits,
+            r_blk=r_blk, interpret=interpret_mode(),
         )
     else:
-        outs = segment_fused_blocked_ref(bsum, bmax, bmin, lrow, r_blk=r_blk)
+        outs = segment_fused_blocked_ref(
+            bsum, bmax, bmin, lrow, data_or=bor, or_nbits=or_nbits,
+            r_blk=r_blk,
+        )
     return tuple(
         o.reshape(n_blocks * r_blk, -1)[:n_rows] if o is not None else None
         for o in outs

@@ -21,6 +21,27 @@ def segment_sum_ref(data: jax.Array, seg: jax.Array, n: int) -> jax.Array:
     return jax.ops.segment_sum(data, seg, num_segments=n)
 
 
+def segment_or_ref(
+    data: jax.Array,   # [E, Do] non-negative ints < 2**nbits
+    seg: jax.Array,    # [E] segment ids
+    num_segments: int,
+    *,
+    nbits: int,
+    indices_are_sorted: bool = False,
+) -> jax.Array:
+    """Per-segment bitwise OR (jax.ops has no segment_or): decompose into
+    ``nbits`` 0/1 bitplanes, segment-sum them, repack with count > 0.
+    Exact for any edge order (counting is associative)."""
+    E, Do = data.shape
+    shifts = jnp.arange(nbits, dtype=data.dtype)
+    planes = ((data[:, :, None] >> shifts) & 1).reshape(E, Do * nbits)
+    cnt = jax.ops.segment_sum(
+        planes, seg, num_segments=num_segments,
+        indices_are_sorted=indices_are_sorted,
+    ).reshape(num_segments, Do, nbits)
+    return ((cnt > 0).astype(data.dtype) << shifts).sum(axis=-1)
+
+
 def segment_fused_blocked_ref(
     data_sum: jax.Array | None,
     data_max: jax.Array | None,
@@ -28,9 +49,12 @@ def segment_fused_blocked_ref(
     lrow: jax.Array,
     *,
     r_blk: int,
+    data_or: jax.Array | None = None,
+    or_nbits: int = 16,
 ):
-    """Oracle for the fused sum/max/min kernel: per-block jax.ops reductions
-    (segment r_blk collects the padding lanes and is sliced off)."""
+    """Oracle for the fused sum/max/min/or kernel: per-block jax.ops
+    reductions (segment r_blk collects the padding lanes and is sliced
+    off)."""
 
     def blocked(op, data):
         if data is None:
@@ -39,8 +63,14 @@ def segment_fused_blocked_ref(
             lambda db, lb: op(db, lb, num_segments=r_blk + 1)[:r_blk]
         )(data, lrow)
 
+    def seg_or(db, lb):
+        return segment_or_ref(
+            db, lb, num_segments=r_blk + 1, nbits=or_nbits
+        )[:r_blk]
+
     return (
         blocked(jax.ops.segment_sum, data_sum),
         blocked(jax.ops.segment_max, data_max),
         blocked(jax.ops.segment_min, data_min),
+        jax.vmap(seg_or)(data_or, lrow) if data_or is not None else None,
     )

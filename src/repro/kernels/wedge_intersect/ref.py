@@ -10,3 +10,13 @@ def wedge_intersect_ref(wu, wv, awu, actu):
     c = (awu * match).sum(-1).astype(jnp.int32)
     k = match.sum(-1).astype(jnp.int32)
     return c, k
+
+
+def common_neighbor_stats_ref(window, weights, active, row, col):
+    """End-to-end jnp path: gather windows and mask weights by the match
+    directly — no separate masked-weight/activity [E, D] operands."""
+    wu = window[row]
+    match = (wu[:, :, None] == window[col][:, None, :]).any(-1) & active[wu]
+    c = jnp.where(match, weights[wu], 0).sum(-1).astype(jnp.int32)
+    k = match.sum(-1).astype(jnp.int32)
+    return c, k

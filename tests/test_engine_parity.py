@@ -9,17 +9,29 @@ final ``status`` / ``w`` / ``offset`` arrays are **bit-identical**:
   * engine schedule "cheap"       == seed per-rule path (fused_sweeps=False),
   * engine schedule "cheap-fused" == seed fused path   (fused_sweeps=True),
   * all aggregate backends (jnp / blocked / pallas-interpret) agree exactly
-    (int32 payloads — addition is associative, so layout cannot matter).
+    (int32 payloads — addition is associative, so layout cannot matter),
+  * the engine-computed window bits (``ctx.act_bits`` / ``ctx.clique`` —
+    fused edge-pass OR payloads on the blocked backends, the vectorized
+    [V, D] form on jnp) == the seed's D-unrolled window gather loop, for
+    arbitrary status/weight states,
+  * the solver paths (greedy / RnP) are unchanged by the backend routing,
+    and distributed greedy still equals the ``sequential.solve_greedy``
+    priority-greedy oracle exactly.
 
 The shard_map-path parity (same assertion across the production execution
 path) lives in ``tests/test_shardmap.py`` (multi-device subprocess).
 """
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import distributed as D
+from repro.core import engine as E
 from repro.core import partition as part
+from repro.core import rules as R
+from repro.core import sequential as seq
+from repro.core import solvers as S
 from repro.graphs import generators as gen
 from tests import seed_oracle as O
 from tests.helpers import SMALL_PAD
@@ -119,3 +131,103 @@ def test_blocked_backend_bit_identical_on_generator_graph():
         heavy_k=6, mode="async", schedule="cheap-fused", backend="blocked"
     ))
     _assert_bit_identical(sb, sj, "rgg/p4/async/blocked")
+
+
+# --------------------------------------------------------------------- #
+# window-bit parity: engine ctx == the frozen D-unrolled seed loop
+# --------------------------------------------------------------------- #
+def _assert_window_bits_match_seed(pg, label, n_states=4):
+    """For arbitrary status/weight states, every backend's act_bits/clique
+    must equal the seed loop bit for bit."""
+    req = frozenset({"act_bits", "clique", "S", "deg", "M", "only"})
+    rng = np.random.default_rng(0)
+    probs = {b: D.build_union_problem(pg, b) for b in E.BACKENDS}
+    for k in range(n_states):
+        state = R.init_state(
+            probs["jnp"].w0, probs["jnp"].is_local, probs["jnp"].is_ghost
+        )
+        if k:  # perturb: arbitrary statuses + shrunk weights
+            st = rng.integers(0, 4, size=probs["jnp"].w0.shape[0])
+            state = state._replace(
+                status=jnp.asarray(st.astype(np.int8)),
+                w=jnp.asarray(
+                    rng.integers(0, 50, size=st.shape).astype(np.int32)
+                ),
+            )
+        want_bits = np.asarray(O._window_active_bits(state, probs["jnp"].aux))
+        want_clq = np.asarray(
+            O._is_clique(state, probs["jnp"].aux, jnp.asarray(want_bits))
+        )
+        for backend, prob in probs.items():
+            ctx = E.compute_ctx(
+                state, prob.aux, req, backend=backend, plan=prob.plan
+            )
+            np.testing.assert_array_equal(
+                np.asarray(ctx.act_bits), want_bits,
+                err_msg=f"{label}/{backend}/state{k}: act_bits diverged",
+            )
+            np.testing.assert_array_equal(
+                np.asarray(ctx.clique), want_clq,
+                err_msg=f"{label}/{backend}/state{k}: clique diverged",
+            )
+
+
+def test_window_bits_match_seed_loop_small():
+    for name, g in _small_graphs():
+        for p in (1, 2):
+            pg = part.partition_graph(
+                g, p, window_cap=8, common_cap=4, pad_to=SMALL_PAD
+            )
+            _assert_window_bits_match_seed(pg, f"{name}/p{p}")
+
+
+@pytest.mark.slow
+def test_window_bits_match_seed_loop_on_generator_matrix():
+    for name, g in _generator_graphs():
+        pg = part.partition_graph(g, 4, window_cap=12)
+        _assert_window_bits_match_seed(pg, f"{name}/p4", n_states=2)
+
+
+# --------------------------------------------------------------------- #
+# solver-path parity: backend routing must not change solver results
+# --------------------------------------------------------------------- #
+def test_solver_paths_identical_across_backends_and_greedy_oracle():
+    for name, g in (
+        [("rgg300", gen.rgg2d(300, avg_deg=7, seed=5))]
+        + [gr for gr in _small_graphs()[:2]]
+    ):
+        for algo in ("greedy", "rg", "rnp"):
+            members = {}
+            for backend in E.BACKENDS:
+                pg = part.partition_graph(g, 2, window_cap=8, common_cap=4)
+                m, _ = S.solve(pg, algo, D.DisReduConfig(
+                    heavy_k=6, mode="async", backend=backend
+                ))
+                assert g.is_independent_set(m), f"{name}/{algo}/{backend}"
+                members[backend] = m
+            for backend in ("blocked", "pallas"):
+                np.testing.assert_array_equal(
+                    members[backend], members["jnp"],
+                    err_msg=f"{name}/{algo}/{backend}: members diverged",
+                )
+            if algo == "greedy":
+                _, m_seq = seq.solve_greedy(g)
+                np.testing.assert_array_equal(
+                    members["jnp"], m_seq,
+                    err_msg=f"{name}: distributed greedy != sequential "
+                            "priority greedy",
+                )
+
+
+def test_row_arrays_sorted_for_aggregate_sorted_flag():
+    """engine.aggregate passes indices_are_sorted=True for Aux rows — the
+    partition (and its union concatenation) must keep rows sorted."""
+    for name, g in _small_graphs()[:2] + [("rgg", gen.rgg2d(200, avg_deg=6,
+                                                            seed=6))]:
+        for p in (1, 3):
+            pg = part.partition_graph(g, p, window_cap=8)
+            for i in range(p):
+                assert (np.diff(pg.row[i]) >= 0).all(), f"{name}/pe{i}"
+            prob = D.build_union_problem(pg)
+            assert (np.diff(np.asarray(prob.aux.row)) >= 0).all(), \
+                f"{name}/union"

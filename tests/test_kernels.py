@@ -110,12 +110,47 @@ def test_segment_fused_partial_payloads_and_ref_dispatch():
     edge_perm, lrow, _ = pack_blocks(row, n_rows, r_blk=8)
     want = jax.ops.segment_max(dmax, jnp.asarray(row), num_segments=n_rows)
     for force in (True, False):
-        s, m, n = segment_fused_coo(
+        s, m, n, o = segment_fused_coo(
             jnp.asarray(edge_perm), jnp.asarray(lrow), n_rows,
             data_max=dmax, force_pallas=force,
         )
-        assert s is None and n is None
+        assert s is None and n is None and o is None
         np.testing.assert_array_equal(np.asarray(m), np.asarray(want))
+
+
+@pytest.mark.parametrize("n_rows,n_edges,r_blk,nbits", [
+    (17, 120, 8, 12), (33, 257, 16, 16), (64, 9, 8, 5),
+])
+def test_segment_fused_or_payloads(n_rows, n_edges, r_blk, nbits):
+    """Bitwise-OR payload group (kernel bitplane matmul + blocked ref + the
+    generic jnp fallback) == per-segment np.bitwise_or, exactly."""
+    from repro.kernels.segment_coo.ref import segment_or_ref
+
+    rng = np.random.default_rng(11)
+    row = rng.integers(0, n_rows, size=n_edges).astype(np.int32)
+    dor = rng.integers(0, 1 << nbits, size=(n_edges, 2)).astype(np.int32)
+    dsum = rng.integers(-9, 9, size=(n_edges, 1)).astype(np.int32)
+    edge_perm, lrow, _ = pack_blocks(row, n_rows, r_blk=r_blk)
+    want = np.zeros((n_rows, 2), np.int32)
+    for e in range(n_edges):
+        want[row[e]] |= dor[e]
+    for force in (True, False):
+        s, _, _, o = segment_fused_coo(
+            jnp.asarray(edge_perm), jnp.asarray(lrow), n_rows,
+            data_sum=jnp.asarray(dsum), data_or=jnp.asarray(dor),
+            or_nbits=nbits, r_blk=r_blk, force_pallas=force,
+        )
+        np.testing.assert_array_equal(np.asarray(o), want)
+        np.testing.assert_array_equal(
+            np.asarray(s),
+            np.asarray(jax.ops.segment_sum(
+                jnp.asarray(dsum), jnp.asarray(row), num_segments=n_rows
+            )),
+        )
+    got = segment_or_ref(
+        jnp.asarray(dor), jnp.asarray(row), n_rows, nbits=nbits
+    )
+    np.testing.assert_array_equal(np.asarray(got), want)
 
 
 def test_pack_blocks_stacked_shared_budget():
@@ -131,7 +166,7 @@ def test_pack_blocks_stacked_shared_budget():
         data = jnp.asarray(
             rng.integers(-9, 9, size=(E, 1)), jnp.int32
         )
-        got, _, _ = segment_fused_coo(
+        got, _, _, _ = segment_fused_coo(
             jnp.asarray(perm[i]), jnp.asarray(lrow[i]), n_rows,
             data_sum=data, force_pallas=False,
         )
