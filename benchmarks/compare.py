@@ -1,0 +1,146 @@
+"""Bench-regression gate: diff a fresh BENCH_engine.json against the
+committed baseline and fail CI on real slowdowns.
+
+    python benchmarks/compare.py BENCH_engine.baseline.json \\
+        BENCH_engine.json --threshold 1.5 --out BENCH_diff.json
+
+Gating policy:
+
+  * Only the **jnp** and **blocked-auto** labels gate (the portable
+    backend and the autotuned blocked plan — the two paths users get by
+    default).  ``pallas*`` / interpret rows are warn-only: interpret mode
+    is a CPU correctness simulation whose timing is noise.
+  * Metrics compared: ``per_sweep_us`` plus the solver-round metrics
+    (``greedy_round_us``, ``rnp_round_us``), per graph row.
+  * When both files carry the frozen seed oracle reference
+    (``per_sweep_us["seed-fused-jnp"]``), each metric is **normalized**
+    by its own file's reference before comparing — the ratio
+    (fresh/fresh_ref) / (base/base_ref) cancels machine-speed differences
+    between the baseline machine and the CI runner.  Without the
+    reference the raw fresh/base ratio is used.
+  * A gated cell regresses when its ratio exceeds ``--threshold``
+    (default 1.5, env ``BENCH_REGRESSION_THRESHOLD``).  Any regression
+    → exit 1.  Missing rows/labels in the fresh file warn only (CI small
+    mode runs a subset).
+
+Writes the full diff (every compared cell with both values and the
+ratio) to ``--out`` for upload as a PR artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+GATED_LABELS = ("jnp", "blocked-auto")
+METRICS = ("per_sweep_us", "greedy_round_us", "rnp_round_us")
+REF_LABEL = "seed-fused-jnp"
+DEFAULT_THRESHOLD = 1.5
+
+
+def _rows_by_graph(payload: dict) -> dict:
+    return {r["graph"]: r for r in payload.get("results", [])}
+
+
+def _ref(row: dict) -> float | None:
+    v = row.get("per_sweep_us", {}).get(REF_LABEL)
+    return float(v) if v else None
+
+
+def compare(baseline: dict, fresh: dict, threshold: float) -> dict:
+    base_rows = _rows_by_graph(baseline)
+    fresh_rows = _rows_by_graph(fresh)
+    cells, regressions, warnings, missing = [], [], [], []
+
+    for graph, brow in sorted(base_rows.items()):
+        frow = fresh_rows.get(graph)
+        if frow is None:
+            missing.append(f"graph {graph!r} absent from fresh results")
+            continue
+        bref, fref = _ref(brow), _ref(frow)
+        normalized = bref is not None and fref is not None
+        for metric in METRICS:
+            bvals = brow.get(metric, {})
+            fvals = frow.get(metric, {})
+            for label, bus in sorted(bvals.items()):
+                if label == REF_LABEL:
+                    continue
+                fus = fvals.get(label)
+                if fus is None:
+                    missing.append(
+                        f"{graph}/{metric}/{label} absent from fresh")
+                    continue
+                bus, fus = float(bus), float(fus)
+                if bus <= 0:
+                    continue
+                if normalized:
+                    ratio = (fus / fref) / (bus / bref)
+                else:
+                    ratio = fus / bus
+                gated = label in GATED_LABELS
+                regressed = ratio > threshold
+                cell = dict(
+                    graph=graph, metric=metric, label=label,
+                    baseline_us=bus, fresh_us=fus,
+                    ratio=round(ratio, 3), normalized=normalized,
+                    gated=gated, regressed=regressed,
+                )
+                cells.append(cell)
+                if regressed and gated:
+                    regressions.append(cell)
+                elif regressed:
+                    warnings.append(cell)
+
+    return dict(
+        threshold=threshold,
+        gated_labels=list(GATED_LABELS),
+        regressions=regressions,
+        warnings=warnings,
+        missing=missing,
+        cells=cells,
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="bench-regression gate (see module docstring)")
+    ap.add_argument("baseline", help="committed BENCH_engine.baseline.json")
+    ap.add_argument("fresh", help="freshly measured BENCH_engine.json")
+    ap.add_argument("--threshold", type=float, default=float(
+        os.environ.get("BENCH_REGRESSION_THRESHOLD", DEFAULT_THRESHOLD)))
+    ap.add_argument("--out", default="BENCH_diff.json",
+                    help="where to write the full diff artifact")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    diff = compare(baseline, fresh, args.threshold)
+    with open(args.out, "w") as f:
+        json.dump(diff, f, indent=2)
+
+    for w in diff["missing"]:
+        print(f"MISSING (warn): {w}")
+    for c in diff["warnings"]:
+        print(f"WARN (ungated {c['label']}): {c['graph']}/{c['metric']} "
+              f"{c['baseline_us']:.1f} -> {c['fresh_us']:.1f}us "
+              f"(x{c['ratio']})")
+    for c in diff["regressions"]:
+        print(f"REGRESSION: {c['graph']}/{c['metric']}/{c['label']} "
+              f"{c['baseline_us']:.1f} -> {c['fresh_us']:.1f}us "
+              f"(x{c['ratio']} > {diff['threshold']}"
+              f"{', normalized' if c['normalized'] else ''})")
+
+    n_gated = sum(1 for c in diff["cells"] if c["gated"])
+    print(f"# compared {len(diff['cells'])} cells ({n_gated} gated), "
+          f"{len(diff['regressions'])} regressions, "
+          f"{len(diff['warnings'])} warnings -> {args.out}")
+    return 1 if diff["regressions"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

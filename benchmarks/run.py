@@ -1,6 +1,8 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 # ``--engine-only`` (or the default full run) also times one reduction
 # sweep per aggregate backend and writes BENCH_engine.json.
+# ``--serve`` runs the batched-serving throughput bench (BENCH_serve.json);
+# see benchmarks/compare.py for the CI bench-regression gate.
 import argparse
 import os
 import sys
@@ -41,7 +43,19 @@ def main() -> None:
                     help="paper tables only, no BENCH_engine.json")
     ap.add_argument("--engine-out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_engine.json"))
+    ap.add_argument("--serve", action="store_true",
+                    help="batched-serving throughput bench -> "
+                         "BENCH_serve.json (with --engine-small: CI-sized)")
+    ap.add_argument("--serve-out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_serve.json"))
     args = ap.parse_args()
+
+    if args.serve:
+        from benchmarks.serve_bench import run_serve_bench
+
+        run_serve_bench(args.serve_out, small=args.engine_small)
+        print(f"# wrote {args.serve_out}", flush=True)
+        return
 
     print("name,us_per_call,derived")
     if not args.engine_only:

@@ -1,0 +1,103 @@
+"""Sustained-throughput benchmark for the batched MWIS serving layer.
+
+Measures instances/sec and p50/p99 per-batch latency for each
+(serve cell × backend × batch size) program of :mod:`repro.core.serve`,
+in the steady serving state (all programs compiled, all topologies
+cached, fresh weights per request).  Writes ``BENCH_serve.json``.
+
+Full mode covers every serve cell at two batch sizes on the jnp backend
+plus blocked and pallas-interpret on the smallest cell (the interpret
+rows are CPU-simulation numbers, not TPU projections).  ``small=True``
+is the CI shape: smallest cell only, jnp + blocked, few requests.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _instance_stream(cell, n_topologies: int, repeats: int, seed: int):
+    """Request list for one cell: n_topologies graphs sized to ~80% of the
+    cell, each repeated with fresh weights (the re-auction pattern)."""
+    import numpy as np
+
+    from repro.graphs.generators import gnm
+
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for t in range(n_topologies):
+        n = max(8, int(cell.L * 0.8))
+        m = min(2 * n, cell.E // 4)
+        g = gnm(n, m, seed=seed + t)
+        for _ in range(repeats):
+            w = rng.integers(1, 201, size=g.n).astype(np.int32)
+            reqs.append(type(g)(indptr=g.indptr, indices=g.indices,
+                                weights=w))
+    return reqs
+
+
+def run_serve_bench(out_path: str, small: bool = False) -> dict:
+    import jax
+
+    from repro.core import serve as SV
+
+    cells = SV.serve_cells()
+    if small:
+        plan = [(cells[0], b, bk)
+                for b in (1, 4) for bk in ("jnp", "blocked")]
+        n_topologies, repeats = 2, 2
+    else:
+        plan = [(c, b, "jnp") for c in cells for b in (4, 16)]
+        plan += [(cells[0], 4, "blocked"), (cells[0], 4, "pallas")]
+        n_topologies, repeats = 4, 4
+
+    results = []
+    for cell, batch, backend in plan:
+        svc = SV.MWISService(
+            SV.ServeConfig(algo="rg", backend=backend, max_batch=batch)
+        )
+        reqs = _instance_stream(cell, n_topologies, repeats, seed=17)
+        batches = [reqs[i:i + batch] for i in range(0, len(reqs), batch)]
+        stats = SV.measure_throughput(svc, batches, warmup=1)
+        label = "pallas-interpret" if backend == "pallas" else backend
+        row = dict(
+            cell=cell.name, backend=label, batch=batch,
+            L=cell.L, E=cell.E,
+            instances_per_sec=stats["instances_per_sec"],
+            p50_ms=stats["p50_ms"], p99_ms=stats["p99_ms"],
+            instances=stats["instances"],
+            cache=svc.stats,
+        )
+        results.append(row)
+        print(f"serve/{cell.name}/{label}/b{batch},"
+              f"{stats['instances_per_sec']},"
+              f"p50={stats['p50_ms']}ms p99={stats['p99_ms']}ms",
+              flush=True)
+
+    payload = dict(
+        meta=dict(
+            unit="sustained instances/sec + per-batch latency ms, steady "
+                 "state (programs compiled, topologies cached, fresh "
+                 "weights per request)",
+            jax=jax.__version__,
+            device=jax.default_backend(),
+            small=small,
+            note="pallas-interpret rows run the kernel in CPU interpret "
+                 "mode — correctness surface, not TPU performance",
+        ),
+        results=results,
+    )
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return payload
+
+
+if __name__ == "__main__":
+    small = "--small" in sys.argv
+    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+    run_serve_bench(out, small=small)
+    print(f"# wrote {out}")

@@ -72,7 +72,29 @@ MWIS_SHAPES: Dict[str, Dict[str, Any]] = {
     "strong_128m": dict(kind="rnp", L=1 << 18, E=1 << 21, G=1 << 15,
                         B=1 << 15, S=1 << 10, D=16, Dc=4,
                         schedule="edges-only", seg_blk=dict(r_blk=8)),
+    # serving cells (MWIS-as-a-service): single-PE buckets the batched
+    # front end pads small/medium instances into.  An incoming instance
+    # lands in the smallest cell with L >= n and E >= 2m, so every
+    # (cell, batch-size) pair is ONE compiled program.  G/B/S are the
+    # min_pad floors (p=1 has no halo); D is the serve window cap;
+    # seg_blk fixes the blocked-ELL row-block height per cell (batching
+    # requires one shared r_blk) and e_blk floors the shared edge budget
+    # (the serving layer grows it as a high-water mark).
+    "serve_xs": dict(kind="serve", L=64, E=1024, G=4, B=4, S=4, D=8,
+                     Dc=4, schedule="cheap-fused",
+                     seg_blk=dict(r_blk=8, e_blk=64)),
+    "serve_s": dict(kind="serve", L=256, E=4096, G=4, B=4, S=4, D=8,
+                    Dc=4, schedule="cheap-fused",
+                    seg_blk=dict(r_blk=16, e_blk=160)),
+    "serve_m": dict(kind="serve", L=1024, E=16384, G=4, B=4, S=4, D=8,
+                    Dc=4, schedule="cheap-fused",
+                    seg_blk=dict(r_blk=32, e_blk=320)),
 }
+
+#: Static batch-size buckets of the serving layer: a request batch is
+#: padded up to the smallest admissible size so (cell × batch) programs
+#: are compiled once and reused for the life of the service.
+MWIS_SERVE_BATCH_SIZES = (1, 4, 16, 64)
 
 
 @dataclasses.dataclass

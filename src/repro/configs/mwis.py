@@ -26,6 +26,15 @@ def rule_schedule(shape_name: str) -> str:
     return base.MWIS_SHAPES[shape_name].get("schedule", "cheap-fused")
 
 
+def serve_cell_names() -> tuple:
+    """The single-PE serving buckets (kind="serve") of MWIS_SHAPES, in
+    ascending size order — the bucket table of the batched front end."""
+    cells = [(name, meta) for name, meta in base.MWIS_SHAPES.items()
+             if meta.get("kind") == "serve"]
+    cells.sort(key=lambda kv: (kv[1]["L"], kv[1]["E"]))
+    return tuple(name for name, _ in cells)
+
+
 def smoke():
     from repro.configs.smoke_runners import mwis_smoke
 
@@ -39,7 +48,10 @@ def _build(shape_name, mesh, fsdp, overrides=None):
 ARCH = base.ArchDef(
     arch_id="mwis",
     family="mwis",
-    shapes=tuple(base.MWIS_SHAPES),
+    # serve cells are single-PE buckets of the batched serving front end
+    # (repro.core.serve), not mesh dry-run workloads
+    shapes=tuple(s for s, m in base.MWIS_SHAPES.items()
+                 if m.get("kind") != "serve"),
     build=_build,
     smoke=smoke,
 )

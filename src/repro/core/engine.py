@@ -64,7 +64,9 @@ there than a sort-based segment pass.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+import hashlib
+from collections import OrderedDict
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -302,6 +304,212 @@ def build_plan_stacked(
         lrow=jnp.asarray(lrow, jnp.int32),
         rblk_tpl=jnp.zeros((r_blk, 0), jnp.int32),
         wbits=wbits, wnh=wnh,
+    )
+
+
+# --------------------------------------------------------------------- #
+# topology-keyed plan caching (the serving layer's reuse contract)
+# --------------------------------------------------------------------- #
+def topology_hash(row: np.ndarray, col: np.ndarray, n_rows: int) -> str:
+    """Digest of the (sorted) directed edge list — weights excluded.
+
+    Two instances share a hash iff they have the same vertex budget and the
+    same edge set, which is exactly the condition under which every
+    topology-derived artifact (blocked-ELL :class:`SegPlan`, window
+    payloads, halo routing) is reusable verbatim; only the weight vector
+    differs between requests.  The pairs are lexsorted before hashing so
+    any permutation of the same edge multiset maps to one key.
+    """
+    row = np.ascontiguousarray(row, dtype=np.int64).reshape(-1)
+    col = np.ascontiguousarray(col, dtype=np.int64).reshape(-1)
+    order = np.lexsort((col, row))
+    h = hashlib.sha1()
+    h.update(np.int64(n_rows).tobytes())
+    h.update(row[order].tobytes())
+    h.update(col[order].tobytes())
+    return h.hexdigest()
+
+
+class PlanCacheStats(NamedTuple):
+    hits: int
+    misses: int
+    evictions: int
+    size: int
+
+
+class PlanCache:
+    """Bounded LRU cache for topology-keyed artifacts (SegPlans, packed
+    serve entries).  Host-side and not thread-safe — one cache per service
+    / driver.  ``max_entries`` bounds resident plans (ISSUE: eviction bound
+    respected); hits refresh recency."""
+
+    def __init__(self, max_entries: int = 256):
+        if max_entries < 1:
+            raise ValueError("PlanCache needs max_entries >= 1")
+        self.max_entries = max_entries
+        self._d: OrderedDict = OrderedDict()
+        self._hits = self._misses = self._evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key) -> bool:
+        return key in self._d
+
+    def get(self, key):
+        """Value for `key` (refreshing recency) or None on miss."""
+        if key in self._d:
+            self._d.move_to_end(key)
+            self._hits += 1
+            return self._d[key]
+        self._misses += 1
+        return None
+
+    def put(self, key, value) -> None:
+        if key in self._d:
+            self._d.move_to_end(key)
+        self._d[key] = value
+        while len(self._d) > self.max_entries:
+            self._d.popitem(last=False)
+            self._evictions += 1
+
+    def get_or_build(self, key, build):
+        """Cached value for `key`, calling `build()` (and caching) on miss."""
+        val = self.get(key)
+        if val is None:
+            val = build()
+            self.put(key, val)
+        return val
+
+    @property
+    def stats(self) -> PlanCacheStats:
+        return PlanCacheStats(
+            hits=self._hits, misses=self._misses,
+            evictions=self._evictions, size=len(self._d),
+        )
+
+
+def plan_for(
+    cache: Optional[PlanCache],
+    row: np.ndarray, n_rows: int, *, r_blk: Optional[int] = R_BLK,
+    col: Optional[np.ndarray] = None, gid: Optional[np.ndarray] = None,
+    window: Optional[np.ndarray] = None,
+    win_adj_bits: Optional[np.ndarray] = None,
+) -> SegPlan:
+    """:func:`build_plan` through a :class:`PlanCache` keyed by topology
+    hash (plus the static build knobs).  ``cache=None`` builds uncached."""
+    if cache is None:
+        return build_plan(
+            row, n_rows, r_blk=r_blk, col=col, gid=gid, window=window,
+            win_adj_bits=win_adj_bits,
+        )
+    key = (
+        topology_hash(row, col if col is not None else row, n_rows),
+        r_blk, window is not None,
+    )
+    return cache.get_or_build(key, lambda: build_plan(
+        row, n_rows, r_blk=r_blk, col=col, gid=gid, window=window,
+        win_adj_bits=win_adj_bits,
+    ))
+
+
+# --------------------------------------------------------------------- #
+# batched plans (serving layer: one vmapped pass over many instances)
+# --------------------------------------------------------------------- #
+def pad_plan(plan: SegPlan, e_blk: int) -> SegPlan:
+    """Pad a plan's edge budget up to `e_blk` so same-cell plans stack.
+
+    Padding slots follow the :func:`pack_blocks` convention — edge 0 with
+    ``lrow = r_blk`` — which every blocked kernel ignores, so a padded plan
+    is bit-identical in effect to the original.
+    """
+    nb, eb = plan.edge_perm.shape
+    if eb > e_blk:
+        raise ValueError(f"cannot shrink plan E_BLK {eb} -> {e_blk}")
+    if eb == e_blk:
+        return plan
+    perm = jnp.zeros((nb, e_blk), jnp.int32).at[:, :eb].set(plan.edge_perm)
+    lrow = jnp.full((nb, e_blk), plan.r_blk, jnp.int32).at[:, :eb].set(
+        plan.lrow
+    )
+    return plan._replace(edge_perm=perm, lrow=lrow)
+
+
+def stack_plans(plans: Sequence[SegPlan],
+                e_blk: Optional[int] = None) -> SegPlan:
+    """Stack same-cell plans onto a leading batch axis (shared E_BLK).
+
+    All plans must share ``r_blk`` and row count (same serve cell); each is
+    padded to the common edge budget — `e_blk` if given (a high-water mark
+    keeps recompiles monotone in the serving layer), else the batch max.
+    Window payloads must be uniformly present or absent.
+    """
+    if not plans:
+        raise ValueError("stack_plans needs at least one plan")
+    r_blk = plans[0].r_blk
+    nb = plans[0].edge_perm.shape[0]
+    if any(p.r_blk != r_blk or p.edge_perm.shape[0] != nb for p in plans):
+        raise ValueError("stack_plans needs plans from one serve cell "
+                         "(same r_blk and row-block count)")
+    has_w = [p.wbits is not None for p in plans]
+    if any(h != has_w[0] for h in has_w):
+        raise ValueError("mixed window payloads across batch plans")
+    need = max(p.edge_perm.shape[1] for p in plans)
+    if e_blk is None:
+        e_blk = need
+    elif e_blk < need:
+        raise ValueError(f"e_blk={e_blk} below batch requirement {need}")
+    padded = [pad_plan(p, e_blk) for p in plans]
+    return SegPlan(
+        edge_perm=jnp.stack([p.edge_perm for p in padded]),
+        lrow=jnp.stack([p.lrow for p in padded]),
+        rblk_tpl=jnp.zeros((len(plans), r_blk, 0), jnp.int32),
+        wbits=jnp.stack([p.wbits for p in padded]) if has_w[0] else None,
+        wnh=jnp.stack([p.wnh for p in padded]) if has_w[0] else None,
+    )
+
+
+def aggregate_batched(
+    seg: Optional[jax.Array],
+    n_rows: int,
+    *,
+    data_sum: Optional[jax.Array] = None,
+    data_max: Optional[jax.Array] = None,
+    data_min: Optional[jax.Array] = None,
+    data_or: Optional[jax.Array] = None,
+    or_nbits: int = 16,
+    backend: str = "jnp",
+    plan: Optional[SegPlan] = None,
+    indices_are_sorted: bool = True,
+) -> Tuple[Optional[jax.Array], ...]:
+    """:func:`aggregate` vmapped over a leading batch axis.
+
+    Payloads (and ``seg`` / the plan leaves, when present) carry a leading
+    batch dimension; every instance is reduced independently and the
+    outputs come back ``[batch, n_rows, ...]``.  Bit-identical per instance
+    to the unbatched entry point on every backend — vmap only reshapes the
+    integer ops, it never reassociates them.
+    """
+    def one(seg_i, d_sum, d_max, d_min, d_or, plan_i):
+        return aggregate(
+            seg_i, n_rows, data_sum=d_sum, data_max=d_max, data_min=d_min,
+            data_or=d_or, or_nbits=or_nbits, backend=backend, plan=plan_i,
+            indices_are_sorted=indices_are_sorted,
+        )
+    axes = (
+        None if seg is None else 0,
+        None if data_sum is None else 0,
+        None if data_max is None else 0,
+        None if data_min is None else 0,
+        None if data_or is None else 0,
+        None if plan is None else SegPlan(
+            edge_perm=0, lrow=0, rblk_tpl=0,
+            wbits=None if plan.wbits is None else 0,
+            wnh=None if plan.wnh is None else 0,
+        ),
+    )
+    return jax.vmap(one, in_axes=axes)(
+        seg, data_sum, data_max, data_min, data_or, plan
     )
 
 

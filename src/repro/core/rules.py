@@ -461,11 +461,19 @@ def reconstruct_members(state: RedState, aux: Aux) -> jax.Array:
     INCLUDED statuses seed the set; FOLD1 (v ∈ I ⟺ u ∉ I) and WT
     (v ∈ I ⟺ I ∩ N(v) = ∅, window-complete by rule gating) records replay
     newest-first.  All record targets are local by rule construction.
+
+    The body masks iterations ≥ log_n onto the nil slot: under vmap (the
+    batched serving path) the lowered while_loop runs every batch element
+    for the max trip count, and an unguarded body would re-apply a clamped
+    log record to a real vertex.  Writing False to the nil slot is inert —
+    nil is never local, so it is never reported as a member.
     """
     in_set = state.status == INCLUDED
+    nil = state.status.shape[0] - 1
 
     def body(i, in_set):
-        k = state.log_n - 1 - i
+        live = i < state.log_n
+        k = jnp.maximum(state.log_n - 1 - i, 0)
         kind = state.log_kind[k]
         v = state.log_v[k]
         u = state.log_u[k]
@@ -473,6 +481,6 @@ def reconstruct_members(state: RedState, aux: Aux) -> jax.Array:
         wt_entries = aux.window[v]
         wt_val = ~(in_set[wt_entries] & (aux.gid[wt_entries] >= 0)).any()
         val = jnp.where(kind == LOG_FOLD1, fold1_val, wt_val)
-        return in_set.at[v].set(val)
+        return in_set.at[jnp.where(live, v, nil)].set(live & val)
 
     return jax.lax.fori_loop(0, state.log_n, body, in_set)

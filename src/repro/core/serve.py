@@ -1,0 +1,358 @@
+"""MWIS-as-a-service: batched many-instance solving on the unified engine.
+
+The paper's distributed reductions shrink ONE giant instance across many
+PEs; the production inverse is thousands of small/medium instances per
+second (conflict scheduling, ad-slot auctions, spectrum allocation).  This
+module is that front end, built on three observations:
+
+  * **shape bucketing** — ``partition_graph(..., pad_to=cell)`` already
+    pads an instance into a static shape cell, so every instance admitted
+    to one cell is the same pytree of array shapes; a batch of them is one
+    leading axis.  The bucket table is the ``kind="serve"`` rows of
+    :data:`repro.configs.base.MWIS_SHAPES` (smallest cell with
+    ``L >= n`` and ``E >= 2m`` wins).
+  * **vmap over the union path** — the solver bodies are already traceable
+    array-in/array-out (:func:`repro.core.solvers.solve_union_arrays`), so
+    the batched solver is literally ``jax.vmap`` of the single-instance
+    program.  Every op in the solve is integer/bool, so the batched run is
+    **bit-identical** per instance to the unbatched path on every backend
+    (vmap reshapes the ops, it never reassociates them); while-loop trip
+    counts couple across the batch, but every round body is idempotent at
+    its fixpoint, so extra rounds are no-ops.
+  * **topology-keyed reuse** — the expensive host-side work (partition,
+    window payloads, blocked-ELL ``SegPlan`` packing + autotune) depends
+    only on the edge list, not the weights.  A :class:`~repro.core.engine.
+    PlanCache` keyed by :func:`~repro.core.engine.topology_hash` makes a
+    repeated topology (the common case: the same conflict graph re-solved
+    with fresh bids every auction round) skip straight to the device call
+    with only a weight-vector refill.
+
+Blocked/pallas batching: all plans in one cell share ``r_blk`` (fixed per
+cell) and row count, so they stack after padding to a shared edge budget.
+The shared E_BLK is a per-(cell, batch) **high-water mark** — it only
+grows, so recompiles are monotone and bounded, and the padded slots are
+by construction ignored by the kernels (bit-identity is preserved).
+
+Donation: the per-request weight planes are donated to the jitted batched
+solver on accelerator backends (buffer reuse for the hot serving loop);
+on CPU jax cannot donate, so the flag is elided to keep logs clean.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as CFG
+from repro.core import engine as E
+from repro.core import solvers as SOL
+from repro.core.graph import Graph
+from repro.core.partition import partition_graph
+
+
+class ServeCell(NamedTuple):
+    """One resolved serving bucket (a kind="serve" MWIS_SHAPES row)."""
+
+    name: str
+    L: int      # max vertices
+    E: int      # max directed edges (2m)
+    G: int      # ghost pad (p=1: floor only)
+    B: int      # board pad
+    S: int      # send-list pad
+    D: int      # window cap
+    Dc: int     # common-neighborhood cap
+    schedule: str
+    r_blk: int  # blocked-ELL row-block height (shared across the cell)
+    e_blk: int  # blocked-ELL edge-budget floor (high-water mark seed)
+
+
+def serve_cells() -> Tuple[ServeCell, ...]:
+    """The bucket table, ascending by capacity."""
+    cells = []
+    for name, meta in CFG.MWIS_SHAPES.items():
+        if meta.get("kind") != "serve":
+            continue
+        seg = meta.get("seg_blk", {})
+        cells.append(ServeCell(
+            name=name, L=meta["L"], E=meta["E"], G=meta["G"], B=meta["B"],
+            S=meta["S"], D=meta["D"], Dc=meta["Dc"],
+            schedule=meta.get("schedule", "cheap-fused"),
+            r_blk=seg.get("r_blk", E.R_BLK),
+            e_blk=seg.get("e_blk", E.E_BLK_MULTIPLE),
+        ))
+    cells.sort(key=lambda c: (c.L, c.E))
+    return tuple(cells)
+
+
+def bucket_for(n: int, directed_edges: int,
+               cells: Optional[Sequence[ServeCell]] = None) -> ServeCell:
+    """Smallest cell admitting an instance with n vertices / 2m directed
+    edges; raises ValueError (naming the limits) when none fits."""
+    cells = tuple(cells) if cells is not None else serve_cells()
+    for c in cells:
+        if n <= c.L and directed_edges <= c.E:
+            return c
+    big = cells[-1] if cells else None
+    raise ValueError(
+        f"instance (n={n}, directed_edges={directed_edges}) exceeds every "
+        f"serve cell; largest is "
+        f"{big.name if big else '<none>'} "
+        f"(L={big.L if big else 0}, E={big.E if big else 0}) — route giant "
+        f"instances through the distributed path (repro.core.solvers.solve)"
+    )
+
+
+class Topology(NamedTuple):
+    """Cached per-topology artifact: everything derived from the edge list.
+
+    ``prob`` is a p=1 UnionProblem whose w0 is a placeholder — requests
+    refill only the weight plane.  ``n`` is the true (unpadded) vertex
+    count; members/weights are read back as ``members[:n]``.
+    """
+
+    prob: SOL.UnionProblem
+    n: int
+
+
+def _pack_topology(g: Graph, cell: ServeCell, backend: str) -> Topology:
+    pg = partition_graph(
+        g, 1, window_cap=cell.D, common_cap=cell.Dc,
+        pad_to=dict(L=cell.L, G=cell.G, E=cell.E, B=cell.B, S=cell.S),
+    )
+    if pg.L != cell.L or pg.E != cell.E or pg.G != cell.G:
+        raise ValueError(
+            f"instance broke out of cell {cell.name}: padded "
+            f"(L={pg.L}, E={pg.E}, G={pg.G}) vs cell "
+            f"(L={cell.L}, E={cell.E}, G={cell.G})"
+        )
+    prob = SOL.build_union_problem(
+        pg, backend, None if backend == "jnp" else cell.r_blk
+    )
+    return Topology(prob=prob, n=g.n)
+
+
+def _weight_plane(g: Graph, cell: ServeCell) -> np.ndarray:
+    w0 = np.zeros(cell.L + cell.G + 1, dtype=np.int32)
+    w0[: g.n] = g.weights
+    return w0
+
+
+class ServeResult(NamedTuple):
+    members: np.ndarray   # [n] bool — the independent set
+    weight: int           # its weight under the request's weight vector
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving knobs (algo/backend/schedule as in DisReduConfig)."""
+
+    algo: str = "rg"              # greedy | rg | rnp
+    backend: str = "jnp"          # jnp | blocked | pallas
+    schedule: Optional[str] = None  # None -> per-cell default
+    heavy_k: int = 8
+    use_heavy: bool = True
+    max_rounds: int = 64
+    cache_entries: int = 256      # topology-cache bound (LRU)
+    max_batch: int = 64           # largest admitted device batch
+
+
+class MWISService:
+    """Bucketing → plan cache → vmapped engine → donation.
+
+    ``solve_batch`` groups requests by serve cell, pads each group to a
+    static batch size (:data:`repro.configs.base.MWIS_SERVE_BATCH_SIZES`),
+    and dispatches one jitted vmapped solve per (cell, batch) program.
+    Results come back in request order.
+    """
+
+    def __init__(self, cfg: ServeConfig = ServeConfig(),
+                 cells: Optional[Sequence[ServeCell]] = None):
+        if cfg.algo not in ("greedy", "rg", "rnp"):
+            raise ValueError(f"unknown serve algo {cfg.algo!r}")
+        if cfg.backend not in E.BACKENDS:
+            raise ValueError(
+                f"unknown backend {cfg.backend!r}; available: {E.BACKENDS}"
+            )
+        self.cfg = cfg
+        self.cells = tuple(cells) if cells is not None else serve_cells()
+        if not self.cells:
+            raise ValueError("no serve cells configured (MWIS_SHAPES has "
+                             "no kind='serve' rows)")
+        self.cache = E.PlanCache(max_entries=cfg.cache_entries)
+        self._batched_fns: Dict[tuple, object] = {}
+        self._eblk_hwm: Dict[str, int] = {}
+        self.compiles = 0
+
+    # ------------------------------------------------------------------ #
+    # request admission
+    # ------------------------------------------------------------------ #
+    def _topology(self, g: Graph, cell: ServeCell) -> Topology:
+        key = (
+            cell.name,
+            E.topology_hash(g.edge_sources(), g.indices, g.n),
+            self.cfg.backend != "jnp",
+        )
+        return self.cache.get_or_build(
+            key, lambda: _pack_topology(g, cell, self.cfg.backend)
+        )
+
+    # ------------------------------------------------------------------ #
+    # the jitted (cell × batch) programs
+    # ------------------------------------------------------------------ #
+    def _batched_fn(self, cell: ServeCell, e_blk: int):
+        sched = self.cfg.schedule or cell.schedule
+        key = (cell.name, self.cfg.backend, self.cfg.algo, sched, e_blk)
+        fn = self._batched_fns.get(key)
+        if fn is not None:
+            return fn
+        cfg = self.cfg
+
+        def one(w0, is_local, is_ghost, aux, halo, plan):
+            state, members = SOL.solve_union_arrays(
+                w0, is_local, is_ghost, aux, halo, plan,
+                algo=cfg.algo, heavy_k=cfg.heavy_k,
+                use_heavy=cfg.use_heavy, sweeps=1_000_000,
+                max_rounds=cfg.max_rounds, p=1, schedule=sched,
+                backend=cfg.backend,
+            )
+            return members, state.offset
+
+        plan_axes = None if cfg.backend == "jnp" else 0
+        batched = jax.vmap(one, in_axes=(0, 0, 0, 0, 0, plan_axes))
+        # donate the per-request weight plane on accelerators; CPU jax
+        # cannot honor donation and would warn on every call
+        donate = () if jax.default_backend() == "cpu" else (0,)
+        fn = jax.jit(batched, donate_argnums=donate)
+        self._batched_fns[key] = fn
+        self.compiles += 1
+        return fn
+
+    def _batch_size(self, k: int) -> int:
+        for b in CFG.MWIS_SERVE_BATCH_SIZES:
+            if b >= k and b <= self.cfg.max_batch:
+                return b
+        return min(max(CFG.MWIS_SERVE_BATCH_SIZES), self.cfg.max_batch)
+
+    # ------------------------------------------------------------------ #
+    # solving
+    # ------------------------------------------------------------------ #
+    def _solve_cell_chunk(
+        self, cell: ServeCell, topos: List[Topology]
+    ) -> List[np.ndarray]:
+        """Solve up to max_batch same-cell topologies; returns [n_i] masks."""
+        k = len(topos)
+        bt = self._batch_size(k)
+        pad = [topos[-1]] * (bt - k)          # repeat last; results dropped
+        batch = topos + pad
+
+        def stack(leaves):
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+
+        probs = [t.prob for t in batch]
+        w0s = stack([p.w0 for p in probs])
+        is_local = stack([p.is_local for p in probs])
+        is_ghost = stack([p.is_ghost for p in probs])
+        auxs = stack([p.aux for p in probs])
+        halos = stack([p.halo for p in probs])
+        if self.cfg.backend == "jnp":
+            plans = None
+            e_blk = 0
+        else:
+            need = max(p.plan.edge_perm.shape[1] for p in probs)
+            hwm = max(self._eblk_hwm.get(cell.name, cell.e_blk), need)
+            self._eblk_hwm[cell.name] = hwm
+            plans = E.stack_plans([p.plan for p in probs], e_blk=hwm)
+            e_blk = hwm
+        fn = self._batched_fn(cell, e_blk)
+        members, _ = fn(w0s, is_local, is_ghost, auxs, halos, plans)
+        members = np.asarray(members)
+        return [members[i, : t.n] for i, t in enumerate(topos)]
+
+    def solve_batch(self, graphs: Sequence[Graph]) -> List[ServeResult]:
+        """Solve many instances; results in request order."""
+        order: Dict[str, List[int]] = {}
+        cells_by_name = {c.name: c for c in self.cells}
+        topos: List[Optional[Topology]] = [None] * len(graphs)
+        for i, g in enumerate(graphs):
+            cell = bucket_for(g.n, g.num_directed_edges, self.cells)
+            # per-request weight refill on a cached (or fresh) topology
+            topo = self._topology(g, cell)
+            topos[i] = Topology(
+                prob=topo.prob._replace(
+                    w0=jnp.asarray(_weight_plane(g, cell))
+                ),
+                n=topo.n,
+            )
+            order.setdefault(cell.name, []).append(i)
+
+        out: List[Optional[ServeResult]] = [None] * len(graphs)
+        for cell_name, idxs in order.items():
+            cell = cells_by_name[cell_name]
+            for c0 in range(0, len(idxs), self.cfg.max_batch):
+                chunk = idxs[c0 : c0 + self.cfg.max_batch]
+                masks = self._solve_cell_chunk(
+                    cell, [topos[i] for i in chunk]
+                )
+                for i, mask in zip(chunk, masks):
+                    out[i] = ServeResult(
+                        members=mask,
+                        weight=int(graphs[i].weights[mask]
+                                   .sum(dtype=np.int64)),
+                    )
+        return out  # type: ignore[return-value]
+
+    def solve_one(self, g: Graph) -> ServeResult:
+        return self.solve_batch([g])[0]
+
+    @property
+    def stats(self) -> dict:
+        s = self.cache.stats
+        return dict(
+            cache_hits=s.hits, cache_misses=s.misses,
+            cache_evictions=s.evictions, cache_size=s.size,
+            programs=len(self._batched_fns), compiles=self.compiles,
+            e_blk_hwm=dict(self._eblk_hwm),
+        )
+
+
+# --------------------------------------------------------------------- #
+# sustained-throughput measurement (benchmarks/serve_bench.py + CLI)
+# --------------------------------------------------------------------- #
+def measure_throughput(
+    service: MWISService,
+    batches: Sequence[Sequence[Graph]],
+    *,
+    warmup: int = 1,
+) -> dict:
+    """Drive pre-built request batches through a service; returns
+    instances/sec + per-batch latency percentiles (ms).
+
+    ``warmup`` counts full passes over the batch list before timing, so
+    every (cell × batch-bucket) program is compiled (and every topology
+    cached) before the measured pass — the steady serving state.
+    """
+    for _ in range(warmup):
+        for b in batches:
+            service.solve_batch(list(b))
+    lat = []
+    n_inst = 0
+    t0 = time.perf_counter()
+    for b in batches:
+        t1 = time.perf_counter()
+        service.solve_batch(list(b))
+        lat.append((time.perf_counter() - t1) * 1e3)
+        n_inst += len(b)
+    wall = time.perf_counter() - t0
+    lat_a = np.asarray(lat)
+    return dict(
+        instances=n_inst,
+        instances_per_sec=round(n_inst / wall, 1),
+        p50_ms=round(float(np.percentile(lat_a, 50)), 3),
+        p99_ms=round(float(np.percentile(lat_a, 99)), 3),
+        batches=len(batches),
+    )

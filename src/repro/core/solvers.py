@@ -208,14 +208,17 @@ def _union_ctx(prob: UnionProblem, backend: str = "jnp") -> Ctx:
     return Ctx(exchange=exch, gany=lambda x: x, peel=peel)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("algo", "heavy_k", "use_heavy", "sweeps", "max_rounds",
-                     "p", "schedule", "backend"),
-)
-def _solve_union_jit(w0, is_local, is_ghost, aux, halo, plan, *, algo,
-                     heavy_k, use_heavy, sweeps, max_rounds, p,
-                     schedule="cheap", backend="jnp"):
+def solve_union_arrays(w0, is_local, is_ghost, aux, halo, plan, *, algo,
+                       heavy_k, use_heavy, sweeps, max_rounds, p,
+                       schedule="cheap", backend="jnp"):
+    """Traceable union-path solve body: arrays in, (state, members) out.
+
+    This is the batch-axis seam of the serving layer: every argument is a
+    plain array pytree (no host-side build), so ``jax.vmap`` over a leading
+    instance axis yields the batched many-instance solver, and the
+    single-instance jit below is the same trace with the axis dropped.
+    Keyword arguments must be trace-static.
+    """
     prob = UnionProblem(w0, is_local, is_ghost, aux, halo, p, 0, plan)
     cfg = DisReduConfig(
         heavy_k=heavy_k, use_heavy=use_heavy,
@@ -228,6 +231,13 @@ def _solve_union_jit(w0, is_local, is_ghost, aux, halo, plan, *, algo,
     state = run_algorithm(state, aux, ctx, cfg, algo, plan=plan)
     members = R.reconstruct_members(state, aux)
     return state, members
+
+
+_solve_union_jit = functools.partial(
+    jax.jit,
+    static_argnames=("algo", "heavy_k", "use_heavy", "sweeps", "max_rounds",
+                     "p", "schedule", "backend"),
+)(solve_union_arrays)
 
 
 def solve(

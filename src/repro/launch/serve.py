@@ -1,5 +1,14 @@
-"""Serving driver: batched DLRM scoring or LM decode on reduced configs.
+"""Serving driver: batched MWIS solving, DLRM scoring, or LM decode.
 
+The default ``mwis`` arch drives the batched many-instance front end
+(:mod:`repro.core.serve`): a stream of random instances is bucketed into
+the static serve cells, topology-cached, and solved as vmapped batches;
+the driver reports sustained instances/sec, p50/p99 batch latency, and
+plan-cache statistics.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mwis --requests 64
+    PYTHONPATH=src python -m repro.launch.serve --arch mwis --algo rnp \\
+        --backend blocked --batch 16 --repeat-topologies 4
     PYTHONPATH=src python -m repro.launch.serve --arch dlrm-mlperf --requests 8
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --tokens 16
 """
@@ -9,14 +18,75 @@ from __future__ import annotations
 import argparse
 import time
 
+ARCHES = ("mwis", "dlrm-mlperf", "gemma3-1b", "qwen3-32b",
+          "mistral-nemo-12b")
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="dlrm-mlperf")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=32)
+
+def _serve_mwis(args) -> None:
+    import numpy as np
+
+    from repro.core import serve as SV
+    from repro.graphs.generators import gnm
+
+    cfg = SV.ServeConfig(algo=args.algo, backend=args.backend,
+                         max_batch=args.batch)
+    svc = SV.MWISService(cfg)
+    cells = svc.cells
+    print(f"mwis service: algo={cfg.algo} backend={cfg.backend} "
+          f"batch<={cfg.max_batch} cells="
+          f"{[f'{c.name}(L={c.L},E={c.E})' for c in cells]}")
+
+    # instance stream: cycle the cells, repeat each topology a few times
+    # (fresh weights each request — the production re-auction pattern)
+    rng = np.random.default_rng(args.seed)
+    reqs = []
+    topo = 0
+    while len(reqs) < args.requests:
+        cell = cells[topo % len(cells)]
+        n = int(cell.L * 0.8)
+        m = min(2 * n, cell.E // 4)
+        g = gnm(n, m, seed=args.seed + topo)
+        for _ in range(args.repeat_topologies):
+            w = rng.integers(1, 201, size=g.n).astype(np.int32)
+            reqs.append(type(g)(indptr=g.indptr, indices=g.indices,
+                                weights=w))
+            if len(reqs) == args.requests:
+                break
+        topo += 1
+
+    batches = [reqs[i:i + args.batch]
+               for i in range(0, len(reqs), args.batch)]
+    stats = SV.measure_throughput(svc, batches, warmup=1)
+    tot_w = 0
+    for b in batches:
+        tot_w += sum(r.weight for r in svc.solve_batch(list(b)))
+    print(f"requests={stats['instances']} batches={stats['batches']} "
+          f"throughput={stats['instances_per_sec']:.1f} inst/s")
+    print(f"p50={stats['p50_ms']:.2f}ms p99={stats['p99_ms']:.2f}ms "
+          f"(per-batch latency)")
+    print(f"total solution weight (last pass): {tot_w}")
+    print(f"cache: {svc.stats}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", default="mwis", choices=ARCHES)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=16)
-    args = ap.parse_args()
+    # mwis-only knobs
+    ap.add_argument("--algo", default="rg",
+                    choices=("greedy", "rg", "rnp"))
+    ap.add_argument("--backend", default="jnp",
+                    choices=("jnp", "blocked", "pallas"))
+    ap.add_argument("--repeat-topologies", type=int, default=4,
+                    help="requests sharing one topology (fresh weights)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.arch == "mwis":
+        _serve_mwis(args)
+        return
 
     import jax
     import jax.numpy as jnp

@@ -1,0 +1,331 @@
+"""Batched MWIS serving layer: cache semantics, vmap invariance, bucketing,
+CLI validation, and the bench-regression gate (benchmarks/compare.py)."""
+
+import copy
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import engine as E
+from repro.core import serve as SV
+from repro.core import solvers as SOL
+from repro.core.distributed import DisReduConfig
+from repro.core.partition import partition_graph
+from repro.graphs.generators import gnm
+
+# --------------------------------------------------------------------- #
+# helpers
+# --------------------------------------------------------------------- #
+
+
+def _reweighted(g, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(1, 201, size=g.n).astype(np.int32)
+    return type(g)(indptr=g.indptr, indices=g.indices, weights=w)
+
+
+def _oracle(g, algo, backend):
+    """The unbatched single-instance path on the same cell shapes."""
+    cell = SV.bucket_for(g.n, g.num_directed_edges)
+    pg = partition_graph(
+        g, 1, window_cap=cell.D, common_cap=cell.Dc,
+        pad_to=dict(L=cell.L, G=cell.G, E=cell.E, B=cell.B, S=cell.S),
+    )
+    cfg = DisReduConfig(
+        backend=backend, r_blk=None if backend == "jnp" else cell.r_blk
+    )
+    members, _ = SOL.solve(pg, algo, cfg)
+    return members
+
+
+# --------------------------------------------------------------------- #
+# PlanCache semantics
+# --------------------------------------------------------------------- #
+
+
+def test_plan_cache_lru_eviction_bound():
+    c = E.PlanCache(max_entries=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1       # refreshes recency: b is now oldest
+    c.put("c", 3)                # evicts b
+    assert len(c) == 2
+    assert c.get("b") is None
+    assert c.get("a") == 1 and c.get("c") == 3
+    s = c.stats
+    assert s.evictions == 1 and s.size == 2
+
+
+def test_topology_hash_semantics():
+    g = gnm(30, 60, seed=0)
+    row, col = g.edge_sources(), g.indices
+    h0 = E.topology_hash(row, col, g.n)
+    # permutation of the same edge multiset -> same hash
+    perm = np.random.default_rng(0).permutation(row.shape[0])
+    assert E.topology_hash(row[perm], col[perm], g.n) == h0
+    # removing an edge (both directions) -> different hash
+    keep = ~(((row == row[0]) & (col == col[0]))
+             | ((row == col[0]) & (col == row[0])))
+    assert E.topology_hash(row[keep], col[keep], g.n) != h0
+    # different vertex budget -> different hash
+    assert E.topology_hash(row, col, g.n + 1) != h0
+
+
+def test_service_cache_hit_miss_semantics():
+    svc = SV.MWISService(SV.ServeConfig(algo="rg", backend="jnp"))
+    g = gnm(24, 50, seed=1)
+    svc.solve_one(g)
+    assert svc.stats["cache_misses"] == 1
+    # identical topology -> hit
+    svc.solve_one(g)
+    assert svc.stats["cache_hits"] == 1
+    # weights-only change -> still a hit (topology key excludes weights)
+    svc.solve_one(_reweighted(g, 7))
+    assert svc.stats["cache_hits"] == 2
+    assert svc.stats["cache_misses"] == 1
+    # edge change -> miss
+    svc.solve_one(gnm(24, 51, seed=1))
+    assert svc.stats["cache_misses"] == 2
+
+
+def test_service_cache_eviction_bound():
+    svc = SV.MWISService(
+        SV.ServeConfig(algo="rg", backend="jnp", cache_entries=2)
+    )
+    for s in range(4):
+        svc.solve_one(gnm(20, 40, seed=s))
+    st = svc.stats
+    assert st["cache_size"] <= 2
+    assert st["cache_evictions"] == 2
+
+
+def test_cached_topology_reuse_is_bit_identical():
+    svc = SV.MWISService(SV.ServeConfig(algo="rg", backend="jnp"))
+    g = gnm(26, 55, seed=3)
+    first = svc.solve_one(g)
+    again = svc.solve_one(g)          # served from cache
+    assert np.array_equal(first.members, again.members)
+    assert first.weight == again.weight
+
+
+# --------------------------------------------------------------------- #
+# vmap invariance: batched == sequence of single-instance runs, per backend
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("backend", ["jnp", "blocked", "pallas"])
+@pytest.mark.parametrize("algo", ["greedy", "rg"])
+def test_batched_matches_single_instance(backend, algo):
+    k = 2 if backend == "pallas" else 4
+    graphs = [gnm(18 + 3 * i, 40 + 4 * i, seed=i) for i in range(k)]
+    svc = SV.MWISService(SV.ServeConfig(algo=algo, backend=backend))
+    res = svc.solve_batch(graphs)
+    for g, r in zip(graphs, res):
+        ref = _oracle(g, algo, backend)
+        assert np.array_equal(r.members, ref), (backend, algo, g.n)
+
+
+def test_batched_rnp_matches_single_instance():
+    graphs = [gnm(20 + 2 * i, 45, seed=10 + i) for i in range(3)]
+    svc = SV.MWISService(SV.ServeConfig(algo="rnp", backend="jnp"))
+    for g, r in zip(graphs, svc.solve_batch(graphs)):
+        assert np.array_equal(r.members, _oracle(g, "rnp", "jnp"))
+
+
+def test_results_are_independent_sets_with_reported_weight():
+    graphs = [gnm(30, 70, seed=20 + i) for i in range(5)]
+    svc = SV.MWISService(SV.ServeConfig(algo="rg", backend="jnp"))
+    for g, r in zip(graphs, svc.solve_batch(graphs)):
+        src = g.edge_sources()
+        assert not np.any(r.members[src] & r.members[g.indices])
+        assert r.weight == int(g.weights[r.members].sum())
+        assert r.members.shape == (g.n,)
+
+
+def test_mixed_cell_batch_and_padding():
+    # instances landing in different cells within one solve_batch call,
+    # with a group size that is not a static batch bucket (padding path)
+    graphs = [gnm(20, 40, seed=30), gnm(22, 44, seed=31),
+              gnm(24, 48, seed=32), gnm(120, 300, seed=33)]
+    svc = SV.MWISService(SV.ServeConfig(algo="rg", backend="jnp"))
+    res = svc.solve_batch(graphs)
+    assert [r.members.shape[0] for r in res] == [g.n for g in graphs]
+    for g, r in zip(graphs, res):
+        assert np.array_equal(r.members, _oracle(g, "rg", "jnp"))
+
+
+# --------------------------------------------------------------------- #
+# bucketing
+# --------------------------------------------------------------------- #
+
+
+def test_bucket_for_picks_smallest_admitting_cell():
+    cells = SV.serve_cells()
+    assert len(cells) >= 3
+    assert SV.bucket_for(10, 20).name == cells[0].name
+    # vertex count forces the next cell up even with few edges
+    nxt = SV.bucket_for(cells[0].L + 1, 8)
+    assert nxt.name == cells[1].name
+    # edge count alone forces promotion too
+    assert SV.bucket_for(8, cells[0].E + 2).name == cells[1].name
+
+
+def test_bucket_for_rejects_oversized_instance():
+    big = SV.serve_cells()[-1]
+    with pytest.raises(ValueError, match="exceeds every serve cell"):
+        SV.bucket_for(big.L + 1, 4)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "blocked"])
+def test_aggregate_batched_matches_per_instance(backend):
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(2)
+    n_rows, n_edges, B = 16, 48, 3
+    seg = np.sort(rng.integers(0, n_rows, size=n_edges)).astype(np.int32)
+    data = rng.integers(0, 1000, size=(B, n_edges)).astype(np.int32)
+    plan = None
+    if backend == "blocked":
+        base_plan = E.build_plan(seg, n_rows, r_blk=8)
+        plan = E.stack_plans([base_plan] * B)
+    seg_b = jnp.asarray(np.broadcast_to(seg, (B, n_edges)).copy())
+    s, m, *_ = E.aggregate_batched(
+        seg_b, n_rows,
+        data_sum=jnp.asarray(data), data_max=jnp.asarray(data),
+        backend=backend, plan=plan,
+    )
+    for i in range(B):
+        si, mi, *_ = E.aggregate(
+            jnp.asarray(seg), n_rows, data_sum=jnp.asarray(data[i]),
+            data_max=jnp.asarray(data[i]), backend=backend,
+            plan=None if plan is None else base_plan,
+        )
+        assert np.array_equal(np.asarray(s[i]), np.asarray(si))
+        assert np.array_equal(np.asarray(m[i]), np.asarray(mi))
+
+
+def test_plan_stacking_bit_identity():
+    # pad_plan slots follow the pack_blocks convention -> identical result
+    g = gnm(40, 100, seed=5)
+    pg = partition_graph(g, 1, window_cap=8, common_cap=4)
+    row = np.asarray(pg.row[0])
+    plan = E.build_plan(row, pg.V, r_blk=8)
+    import jax.numpy as jnp
+    data = np.random.default_rng(0).integers(0, 100, row.shape[0])
+    data = jnp.asarray(data, jnp.int32)
+    s0, _, _, _ = E.aggregate(jnp.asarray(row), pg.V, data_sum=data,
+                              backend="blocked", plan=plan)
+    padded = E.pad_plan(plan, plan.edge_perm.shape[1] + 24)
+    s1, _, _, _ = E.aggregate(jnp.asarray(row), pg.V, data_sum=data,
+                              backend="blocked", plan=padded)
+    assert np.array_equal(np.asarray(s0), np.asarray(s1))
+
+
+# --------------------------------------------------------------------- #
+# CLI validation
+# --------------------------------------------------------------------- #
+
+
+def test_serve_cli_rejects_unknown_arch(capsys):
+    from repro.launch import serve as L
+
+    with pytest.raises(SystemExit) as e:
+        L.main(["--arch", "nope"])
+    assert e.value.code == 2
+    err = capsys.readouterr().err
+    for arch in L.ARCHES:
+        assert arch in err  # the error lists every valid choice
+
+
+# --------------------------------------------------------------------- #
+# bench-regression gate (benchmarks/compare.py)
+# --------------------------------------------------------------------- #
+
+BASE = dict(
+    meta={},
+    results=[dict(
+        graph="g1", n=100, m=200, p=2, schedule="cheap-fused",
+        per_sweep_us={"jnp": 100.0, "blocked-auto": 200.0,
+                      "pallas-interpret": 5000.0, "seed-fused-jnp": 110.0},
+        greedy_round_us={"jnp": 50.0, "blocked-auto": 90.0},
+        rnp_round_us={"jnp": 70.0},
+    )],
+)
+
+
+def _run_compare(tmp_path, baseline, fresh, argv_extra=()):
+    from benchmarks import compare as C
+
+    b = tmp_path / "base.json"
+    f = tmp_path / "fresh.json"
+    out = tmp_path / "diff.json"
+    b.write_text(json.dumps(baseline))
+    f.write_text(json.dumps(fresh))
+    rc = C.main([str(b), str(f), "--out", str(out), *argv_extra])
+    return rc, json.loads(out.read_text())
+
+
+def test_compare_clean_run_passes(tmp_path):
+    rc, diff = _run_compare(tmp_path, BASE, copy.deepcopy(BASE))
+    assert rc == 0
+    assert diff["regressions"] == []
+    assert any(c["gated"] for c in diff["cells"])
+
+
+def test_compare_synthetic_2x_slowdown_fails(tmp_path):
+    slow = copy.deepcopy(BASE)
+    slow["results"][0]["per_sweep_us"]["jnp"] *= 2.0
+    rc, diff = _run_compare(tmp_path, BASE, slow)
+    assert rc == 1
+    assert len(diff["regressions"]) == 1
+    r = diff["regressions"][0]
+    assert r["label"] == "jnp" and r["normalized"]
+
+
+def test_compare_solver_round_regression_fails(tmp_path):
+    slow = copy.deepcopy(BASE)
+    slow["results"][0]["greedy_round_us"]["blocked-auto"] *= 3.0
+    rc, diff = _run_compare(tmp_path, BASE, slow)
+    assert rc == 1
+    assert diff["regressions"][0]["metric"] == "greedy_round_us"
+
+
+def test_compare_pallas_regression_warns_only(tmp_path):
+    slow = copy.deepcopy(BASE)
+    slow["results"][0]["per_sweep_us"]["pallas-interpret"] *= 10.0
+    rc, diff = _run_compare(tmp_path, BASE, slow)
+    assert rc == 0
+    assert diff["regressions"] == []
+    assert len(diff["warnings"]) == 1
+    assert diff["warnings"][0]["label"] == "pallas-interpret"
+
+
+def test_compare_normalization_cancels_machine_speed(tmp_path):
+    # a uniformly 3x-slower machine (every metric AND the seed reference
+    # scaled together) must NOT trip the gate
+    slow = copy.deepcopy(BASE)
+    row = slow["results"][0]
+    for metric in ("per_sweep_us", "greedy_round_us", "rnp_round_us"):
+        row[metric] = {k: v * 3.0 for k, v in row[metric].items()}
+    rc, diff = _run_compare(tmp_path, BASE, slow)
+    assert rc == 0
+    assert diff["regressions"] == [] and diff["warnings"] == []
+
+
+def test_compare_threshold_is_configurable(tmp_path):
+    slow = copy.deepcopy(BASE)
+    slow["results"][0]["per_sweep_us"]["jnp"] *= 1.3
+    rc, _ = _run_compare(tmp_path, BASE, slow)
+    assert rc == 0                    # 1.3x under default 1.5
+    rc, _ = _run_compare(tmp_path, BASE, slow,
+                         argv_extra=("--threshold", "1.2"))
+    assert rc == 1
+
+
+def test_compare_missing_rows_warn_not_fail(tmp_path):
+    fresh = copy.deepcopy(BASE)
+    fresh["results"] = []             # CI small mode ran a subset
+    rc, diff = _run_compare(tmp_path, BASE, fresh)
+    assert rc == 0
+    assert diff["missing"]
