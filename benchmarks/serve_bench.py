@@ -63,19 +63,32 @@ def run_serve_bench(out_path: str, small: bool = False) -> dict:
         reqs = _instance_stream(cell, n_topologies, repeats, seed=17)
         batches = [reqs[i:i + batch] for i in range(0, len(reqs), batch)]
         stats = SV.measure_throughput(svc, batches, warmup=1)
+        # second pass with verify=full on the same topology cache: the
+        # delta is the pure post-solve audit cost (independence check +
+        # weight recomputation per request)
+        svc_v = SV.MWISService(
+            SV.ServeConfig(algo="rg", backend=backend, max_batch=batch,
+                           verify="full")
+        )
+        stats_v = SV.measure_throughput(svc_v, batches, warmup=1)
+        ips, ips_v = stats["instances_per_sec"], stats_v["instances_per_sec"]
+        overhead = round(100.0 * (ips - ips_v) / ips, 1) if ips else 0.0
         label = "pallas-interpret" if backend == "pallas" else backend
         row = dict(
             cell=cell.name, backend=label, batch=batch,
             L=cell.L, E=cell.E,
-            instances_per_sec=stats["instances_per_sec"],
+            instances_per_sec=ips,
+            instances_per_sec_verify_full=ips_v,
+            verify_full_overhead_pct=overhead,
             p50_ms=stats["p50_ms"], p99_ms=stats["p99_ms"],
             instances=stats["instances"],
             cache=svc.stats,
         )
         results.append(row)
         print(f"serve/{cell.name}/{label}/b{batch},"
-              f"{stats['instances_per_sec']},"
-              f"p50={stats['p50_ms']}ms p99={stats['p99_ms']}ms",
+              f"{ips},"
+              f"p50={stats['p50_ms']}ms p99={stats['p99_ms']}ms "
+              f"verify_full={ips_v} ({overhead}% overhead)",
               flush=True)
 
     payload = dict(
@@ -88,6 +101,9 @@ def run_serve_bench(out_path: str, small: bool = False) -> dict:
             small=small,
             note="pallas-interpret rows run the kernel in CPU interpret "
                  "mode — correctness surface, not TPU performance",
+            verify_note="instances_per_sec_verify_full re-runs the same "
+                        "stream with ServeConfig.verify='full' (post-solve "
+                        "independence + weight audit on every request)",
         ),
         results=results,
     )

@@ -335,6 +335,7 @@ class PlanCacheStats(NamedTuple):
     misses: int
     evictions: int
     size: int
+    errors: int = 0   # build() raises observed by get_or_build
 
 
 class PlanCache:
@@ -348,7 +349,7 @@ class PlanCache:
             raise ValueError("PlanCache needs max_entries >= 1")
         self.max_entries = max_entries
         self._d: OrderedDict = OrderedDict()
-        self._hits = self._misses = self._evictions = 0
+        self._hits = self._misses = self._evictions = self._errors = 0
 
     def __len__(self) -> int:
         return len(self._d)
@@ -374,10 +375,20 @@ class PlanCache:
             self._evictions += 1
 
     def get_or_build(self, key, build):
-        """Cached value for `key`, calling `build()` (and caching) on miss."""
+        """Cached value for `key`, calling `build()` (and caching) on miss.
+
+        A raising ``build()`` leaves the cache **unpoisoned**: no entry is
+        inserted for `key` (a later call re-attempts the build), the miss
+        is counted exactly once, the failure is counted in
+        ``stats.errors``, and the exception propagates to the caller.
+        """
         val = self.get(key)
         if val is None:
-            val = build()
+            try:
+                val = build()
+            except Exception:
+                self._errors += 1
+                raise
             self.put(key, val)
         return val
 
@@ -386,6 +397,7 @@ class PlanCache:
         return PlanCacheStats(
             hits=self._hits, misses=self._misses,
             evictions=self._evictions, size=len(self._d),
+            errors=self._errors,
         )
 
 

@@ -233,17 +233,30 @@ def exchange_shmap(
     )
 
 
-def exchange_union(
-    state: R.RedState, aux: R.Aux, halo: Halo, *, p: int,
-    backend: str = "jnp", plan: Optional[E.SegPlan] = None,
-) -> Tuple[R.RedState, jax.Array]:
-    """Union-layout exchange: 'collectives' are plain indexing across the
-    stacked [p, ...] halo (single-device simulation of the SPMD program)."""
-    # Boards of all PEs at once: halo.iface_slots is [p, B] with union indices.
+def union_boards(
+    state: R.RedState, halo: Halo
+) -> Tuple[jax.Array, jax.Array]:
+    """Every PE's published interface board in the union layout.
+
+    Returns ``(boards_w, boards_s)``, both [p, B] — the message each PE
+    *would* put on the wire this round.  This is the fault-injection seam:
+    :mod:`repro.distributed.fault` snapshots these boards per round and
+    feeds delayed/dropped variants back through
+    :func:`reconcile_union_boards`, which is exactly a late/lost message
+    in the bounded-staleness exchange (§5.4).
+    """
+    # halo.iface_slots is [p, B] with union indices (pad = p*V, clamped).
     nil_u = state.w.shape[0] - 1
     slots = jnp.minimum(halo.iface_slots, nil_u)
-    boards_w = state.w[slots]          # [p, B]
-    boards_s = state.status[slots]     # [p, B]
+    return state.w[slots], state.status[slots]
+
+
+def reconcile_union_boards(
+    state: R.RedState, aux: R.Aux, halo: Halo,
+    boards_w: jax.Array, boards_s: jax.Array, *,
+    backend: str = "jnp", plan: Optional[E.SegPlan] = None,
+) -> Tuple[R.RedState, jax.Array]:
+    """Apply a full [p, B] board set (possibly stale) to the union state."""
     gw = boards_w[halo.ghost_owner_pe, halo.ghost_owner_slot]  # [p, G]
     gs = boards_s[halo.ghost_owner_pe, halo.ghost_owner_slot]
     return reconcile(
@@ -252,4 +265,16 @@ def exchange_union(
         halo.ghost_valid.reshape(-1),
         gw.reshape(-1), gs.reshape(-1),
         backend=backend, plan=plan,
+    )
+
+
+def exchange_union(
+    state: R.RedState, aux: R.Aux, halo: Halo, *, p: int,
+    backend: str = "jnp", plan: Optional[E.SegPlan] = None,
+) -> Tuple[R.RedState, jax.Array]:
+    """Union-layout exchange: 'collectives' are plain indexing across the
+    stacked [p, ...] halo (single-device simulation of the SPMD program)."""
+    boards_w, boards_s = union_boards(state, halo)
+    return reconcile_union_boards(
+        state, aux, halo, boards_w, boards_s, backend=backend, plan=plan,
     )

@@ -36,6 +36,31 @@ by construction ignored by the kernels (bit-identity is preserved).
 Donation: the per-request weight planes are donated to the jitted batched
 solver on accelerator backends (buffer reuse for the hot serving loop);
 on CPU jax cannot donate, so the flag is elided to keep logs clean.
+
+Robustness (the hardened-serving layer):
+
+  * **admission** — requests pass :func:`repro.core.validate.canonicalize`
+    (``ServeConfig.validate``): harmless defects (self-loops, duplicate or
+    asymmetric directed edges, unsorted rows) are repaired, rejects
+    (NaN/negative/overflow weights, broken CSR, out-of-range indices)
+    become structured per-request errors with stable reason codes.
+  * **per-request fault isolation** — `solve_batch` NEVER raises for a bad
+    instance; every :class:`ServeResult` carries ``ok``/``reason``/
+    ``error``, so one poisoned request (oversize, malformed, unpackable)
+    degrades to an error entry while every healthy instance in the batch
+    still solves bit-identically to the pre-hardening path.  Oversize
+    instances are rejected with ``reason="oversize"`` — route those
+    through the distributed path (:func:`repro.core.solvers.solve`).
+  * **backend fallback** — a compile/runtime failure of the configured
+    backend falls down the chain ``pallas → blocked → jnp`` (all three are
+    bit-identical by the engine contract, so degradation is performance
+    only); failed plan builds stay out of the `PlanCache`
+    (`get_or_build` never caches a raising build), and fallbacks are
+    counted in ``MWISService.stats``.
+  * **verified outputs** — ``ServeConfig.verify`` ∈ ``off | sample |
+    full`` audits results post-solve (:func:`repro.core.validate.
+    verify_result`): independence + weight recomputation.  ``sample``
+    checks the first request of every device chunk; ``full`` checks all.
 """
 
 from __future__ import annotations
@@ -51,8 +76,16 @@ import numpy as np
 from repro.configs import base as CFG
 from repro.core import engine as E
 from repro.core import solvers as SOL
+from repro.core import validate as V
 from repro.core.graph import Graph
 from repro.core.partition import partition_graph
+
+#: Backend degradation order: a failing backend falls to the next entry.
+FALLBACK_CHAIN = {
+    "pallas": ("pallas", "blocked", "jnp"),
+    "blocked": ("blocked", "jnp"),
+    "jnp": ("jnp",),
+}
 
 
 class ServeCell(NamedTuple):
@@ -143,8 +176,25 @@ def _weight_plane(g: Graph, cell: ServeCell) -> np.ndarray:
 
 
 class ServeResult(NamedTuple):
+    """One request's outcome.  ``ok=False`` results carry a stable
+    ``reason`` code (:mod:`repro.core.validate` REASON_*) and a
+    human-readable ``error``; their mask is all-False and weight 0.
+    ``reason="oversize"`` means the instance exceeds every serve cell —
+    route it through the distributed path, ``repro.core.solvers.solve``.
+    """
+
     members: np.ndarray   # [n] bool — the independent set
     weight: int           # its weight under the request's weight vector
+    ok: bool = True
+    reason: Optional[str] = None   # machine-readable error code
+    error: Optional[str] = None    # human-readable detail
+
+
+def _error_result(n: int, reason: str, detail: str) -> ServeResult:
+    return ServeResult(
+        members=np.zeros(max(n, 0), dtype=bool), weight=0,
+        ok=False, reason=reason, error=f"{reason}: {detail}",
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,6 +209,9 @@ class ServeConfig:
     max_rounds: int = 64
     cache_entries: int = 256      # topology-cache bound (LRU)
     max_batch: int = 64           # largest admitted device batch
+    validate: bool = True         # canonicalize/reject requests on admission
+    verify: str = "off"           # post-solve audit: off | sample | full
+    fallback: bool = True         # walk FALLBACK_CHAIN on backend failure
 
 
 class MWISService:
@@ -178,6 +231,11 @@ class MWISService:
             raise ValueError(
                 f"unknown backend {cfg.backend!r}; available: {E.BACKENDS}"
             )
+        if cfg.verify not in ("off", "sample", "full"):
+            raise ValueError(
+                f"unknown verify mode {cfg.verify!r}; "
+                "available: ('off', 'sample', 'full')"
+            )
         self.cfg = cfg
         self.cells = tuple(cells) if cells is not None else serve_cells()
         if not self.cells:
@@ -187,26 +245,35 @@ class MWISService:
         self._batched_fns: Dict[tuple, object] = {}
         self._eblk_hwm: Dict[str, int] = {}
         self.compiles = 0
+        # active backend: starts at cfg.backend, demoted down
+        # FALLBACK_CHAIN when a program build/execute fails
+        self._backend = cfg.backend
+        self.counters = dict(
+            requests=0, rejected=0, repaired=0, pack_errors=0,
+            solve_errors=0, fallbacks=0, verify_checked=0,
+            verify_failures=0,
+        )
+        self.events: List[tuple] = []   # (kind, detail) robustness log
 
     # ------------------------------------------------------------------ #
     # request admission
     # ------------------------------------------------------------------ #
-    def _topology(self, g: Graph, cell: ServeCell) -> Topology:
+    def _topology(self, g: Graph, cell: ServeCell, backend: str) -> Topology:
         key = (
             cell.name,
             E.topology_hash(g.edge_sources(), g.indices, g.n),
-            self.cfg.backend != "jnp",
+            backend != "jnp",
         )
         return self.cache.get_or_build(
-            key, lambda: _pack_topology(g, cell, self.cfg.backend)
+            key, lambda: _pack_topology(g, cell, backend)
         )
 
     # ------------------------------------------------------------------ #
     # the jitted (cell × batch) programs
     # ------------------------------------------------------------------ #
-    def _batched_fn(self, cell: ServeCell, e_blk: int):
+    def _batched_fn(self, cell: ServeCell, e_blk: int, backend: str):
         sched = self.cfg.schedule or cell.schedule
-        key = (cell.name, self.cfg.backend, self.cfg.algo, sched, e_blk)
+        key = (cell.name, backend, self.cfg.algo, sched, e_blk)
         fn = self._batched_fns.get(key)
         if fn is not None:
             return fn
@@ -218,11 +285,11 @@ class MWISService:
                 algo=cfg.algo, heavy_k=cfg.heavy_k,
                 use_heavy=cfg.use_heavy, sweeps=1_000_000,
                 max_rounds=cfg.max_rounds, p=1, schedule=sched,
-                backend=cfg.backend,
+                backend=backend,
             )
             return members, state.offset
 
-        plan_axes = None if cfg.backend == "jnp" else 0
+        plan_axes = None if backend == "jnp" else 0
         batched = jax.vmap(one, in_axes=(0, 0, 0, 0, 0, plan_axes))
         # donate the per-request weight plane on accelerators; CPU jax
         # cannot honor donation and would warn on every call
@@ -241,10 +308,15 @@ class MWISService:
     # ------------------------------------------------------------------ #
     # solving
     # ------------------------------------------------------------------ #
-    def _solve_cell_chunk(
-        self, cell: ServeCell, topos: List[Topology]
+    def _execute_chunk(
+        self, cell: ServeCell, topos: List[Topology], backend: str
     ) -> List[np.ndarray]:
-        """Solve up to max_batch same-cell topologies; returns [n_i] masks."""
+        """Solve up to max_batch same-cell topologies; returns [n_i] masks.
+
+        Raises on program build/execute failure — `_solve_chunk` wraps it
+        with the fallback chain.  (Tests monkeypatch this seam to inject
+        backend failures.)
+        """
         k = len(topos)
         bt = self._batch_size(k)
         pad = [topos[-1]] * (bt - k)          # repeat last; results dropped
@@ -259,7 +331,7 @@ class MWISService:
         is_ghost = stack([p.is_ghost for p in probs])
         auxs = stack([p.aux for p in probs])
         halos = stack([p.halo for p in probs])
-        if self.cfg.backend == "jnp":
+        if backend == "jnp":
             plans = None
             e_blk = 0
         else:
@@ -268,42 +340,131 @@ class MWISService:
             self._eblk_hwm[cell.name] = hwm
             plans = E.stack_plans([p.plan for p in probs], e_blk=hwm)
             e_blk = hwm
-        fn = self._batched_fn(cell, e_blk)
+        fn = self._batched_fn(cell, e_blk, backend)
         members, _ = fn(w0s, is_local, is_ghost, auxs, halos, plans)
         members = np.asarray(members)
         return [members[i, : t.n] for i, t in enumerate(topos)]
 
+    def _solve_chunk(
+        self,
+        cell: ServeCell,
+        idxs: List[int],
+        graphs: List[Graph],
+        out: List[Optional[ServeResult]],
+    ) -> None:
+        """Pack + solve one (cell, ≤max_batch) chunk with per-request
+        isolation and the backend fallback chain; fills ``out``."""
+        while True:
+            backend = self._backend
+            topos: List[Topology] = []
+            good: List[int] = []
+            for i in idxs:
+                g = graphs[i]
+                try:
+                    # per-request weight refill on a cached/fresh topology;
+                    # a raising pack stays OUT of the cache (get_or_build)
+                    topo = self._topology(g, cell, backend)
+                    topos.append(Topology(
+                        prob=topo.prob._replace(
+                            w0=jnp.asarray(_weight_plane(g, cell))
+                        ),
+                        n=topo.n,
+                    ))
+                    good.append(i)
+                except Exception as e:  # noqa: BLE001 — isolate the request
+                    self.counters["pack_errors"] += 1
+                    self.events.append(("pack_error", cell.name, str(e)))
+                    out[i] = _error_result(g.n, V.REASON_PACK_FAILED, str(e))
+            if not good:
+                return
+            try:
+                masks = self._execute_chunk(cell, topos, backend)
+            except Exception as e:  # noqa: BLE001 — degrade, don't abort
+                chain = FALLBACK_CHAIN[self.cfg.backend]
+                pos = chain.index(backend) if backend in chain else len(chain)
+                nxt = chain[pos + 1] if pos + 1 < len(chain) else None
+                if nxt is None or not self.cfg.fallback:
+                    self.counters["solve_errors"] += 1
+                    self.events.append(
+                        ("backend_failed", cell.name, backend, str(e)))
+                    for i in good:
+                        out[i] = _error_result(
+                            graphs[i].n, V.REASON_BACKEND_FAILED,
+                            f"backend {backend!r} failed with no fallback "
+                            f"left: {e}")
+                    return
+                self.counters["fallbacks"] += 1
+                self.events.append(("fallback", backend, nxt, str(e)))
+                self._backend = nxt
+                continue        # retry the chunk on the demoted backend
+            for k, i in enumerate(good):
+                out[i] = self._finish_result(
+                    graphs[i], masks[k], check=(self.cfg.verify == "full")
+                    or (self.cfg.verify == "sample" and k == 0))
+            return
+
+    def _finish_result(
+        self, g: Graph, mask: np.ndarray, check: bool
+    ) -> ServeResult:
+        weight = int(g.weights[mask].sum(dtype=np.int64))
+        if check:
+            self.counters["verify_checked"] += 1
+            rep = V.verify_result(g, mask, weight)
+            if not rep.ok:
+                self.counters["verify_failures"] += 1
+                self.events.append(("verify_failure", rep.detail))
+                return ServeResult(
+                    members=mask, weight=weight, ok=False,
+                    reason=rep.reason, error=f"{rep.reason}: {rep.detail}",
+                )
+        return ServeResult(members=mask, weight=weight)
+
     def solve_batch(self, graphs: Sequence[Graph]) -> List[ServeResult]:
-        """Solve many instances; results in request order."""
+        """Solve many instances; results in request order.
+
+        Never raises for a bad request: malformed/oversize/unpackable
+        instances come back as ``ok=False`` results with stable reason
+        codes while the rest of the batch solves normally.
+        """
         order: Dict[str, List[int]] = {}
         cells_by_name = {c.name: c for c in self.cells}
-        topos: List[Optional[Topology]] = [None] * len(graphs)
+        admitted: List[Graph] = list(graphs)
+        out: List[Optional[ServeResult]] = [None] * len(graphs)
         for i, g in enumerate(graphs):
-            cell = bucket_for(g.n, g.num_directed_edges, self.cells)
-            # per-request weight refill on a cached (or fresh) topology
-            topo = self._topology(g, cell)
-            topos[i] = Topology(
-                prob=topo.prob._replace(
-                    w0=jnp.asarray(_weight_plane(g, cell))
-                ),
-                n=topo.n,
-            )
+            self.counters["requests"] += 1
+            if self.cfg.validate:
+                fixed, rep = V.canonicalize(g)
+                if not rep.ok:
+                    self.counters["rejected"] += 1
+                    self.events.append(("rejected", rep.reason, rep.detail))
+                    try:
+                        n_bad = int(g.n)
+                    except Exception:  # noqa: BLE001 — malformed input
+                        n_bad = 0
+                    out[i] = _error_result(n_bad, rep.reason, rep.detail)
+                    continue
+                if rep.repairs:
+                    self.counters["repaired"] += 1
+                    self.events.append(("repaired", rep.repairs))
+                admitted[i] = g = fixed
+            if g.n == 0:    # trivially solved; skip the device entirely
+                out[i] = ServeResult(members=np.zeros(0, bool), weight=0)
+                continue
+            try:
+                cell = bucket_for(g.n, g.num_directed_edges, self.cells)
+            except ValueError as e:
+                self.counters["rejected"] += 1
+                self.events.append(("rejected", V.REASON_OVERSIZE, str(e)))
+                out[i] = _error_result(g.n, V.REASON_OVERSIZE, str(e))
+                continue
             order.setdefault(cell.name, []).append(i)
 
-        out: List[Optional[ServeResult]] = [None] * len(graphs)
         for cell_name, idxs in order.items():
             cell = cells_by_name[cell_name]
             for c0 in range(0, len(idxs), self.cfg.max_batch):
-                chunk = idxs[c0 : c0 + self.cfg.max_batch]
-                masks = self._solve_cell_chunk(
-                    cell, [topos[i] for i in chunk]
+                self._solve_chunk(
+                    cell, idxs[c0 : c0 + self.cfg.max_batch], admitted, out
                 )
-                for i, mask in zip(chunk, masks):
-                    out[i] = ServeResult(
-                        members=mask,
-                        weight=int(graphs[i].weights[mask]
-                                   .sum(dtype=np.int64)),
-                    )
         return out  # type: ignore[return-value]
 
     def solve_one(self, g: Graph) -> ServeResult:
@@ -315,8 +476,11 @@ class MWISService:
         return dict(
             cache_hits=s.hits, cache_misses=s.misses,
             cache_evictions=s.evictions, cache_size=s.size,
+            cache_errors=s.errors,
             programs=len(self._batched_fns), compiles=self.compiles,
             e_blk_hwm=dict(self._eblk_hwm),
+            backend=self.cfg.backend, backend_active=self._backend,
+            **self.counters,
         )
 
 

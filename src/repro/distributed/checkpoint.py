@@ -42,12 +42,13 @@ def _leaf_paths(tree: Any, prefix: str = "") -> Dict[str, Any]:
     if isinstance(tree, dict):
         for k in sorted(tree):
             out.update(_leaf_paths(tree[k], f"{prefix}{k}."))
+    elif hasattr(tree, "_fields"):  # NamedTuple — before the tuple branch,
+        # so leaf keys are field names (what _unflatten_like looks up)
+        for k in tree._fields:
+            out.update(_leaf_paths(getattr(tree, k), f"{prefix}{k}."))
     elif isinstance(tree, (list, tuple)):
         for i, v in enumerate(tree):
             out.update(_leaf_paths(v, f"{prefix}{i}."))
-    elif hasattr(tree, "_fields"):  # NamedTuple
-        for k in tree._fields:
-            out.update(_leaf_paths(getattr(tree, k), f"{prefix}{k}."))
     else:
         out[prefix[:-1]] = tree
     return out

@@ -29,11 +29,11 @@ def _serve_mwis(args) -> None:
     from repro.graphs.generators import gnm
 
     cfg = SV.ServeConfig(algo=args.algo, backend=args.backend,
-                         max_batch=args.batch)
+                         max_batch=args.batch, verify=args.verify)
     svc = SV.MWISService(cfg)
     cells = svc.cells
     print(f"mwis service: algo={cfg.algo} backend={cfg.backend} "
-          f"batch<={cfg.max_batch} cells="
+          f"verify={cfg.verify} batch<={cfg.max_batch} cells="
           f"{[f'{c.name}(L={c.L},E={c.E})' for c in cells]}")
 
     # instance stream: cycle the cells, repeat each topology a few times
@@ -58,14 +58,29 @@ def _serve_mwis(args) -> None:
                for i in range(0, len(reqs), args.batch)]
     stats = SV.measure_throughput(svc, batches, warmup=1)
     tot_w = 0
+    n_err = 0
     for b in batches:
-        tot_w += sum(r.weight for r in svc.solve_batch(list(b)))
+        rs = svc.solve_batch(list(b))
+        tot_w += sum(r.weight for r in rs)
+        n_err += sum(not r.ok for r in rs)
     print(f"requests={stats['instances']} batches={stats['batches']} "
           f"throughput={stats['instances_per_sec']:.1f} inst/s")
     print(f"p50={stats['p50_ms']:.2f}ms p99={stats['p99_ms']:.2f}ms "
           f"(per-batch latency)")
-    print(f"total solution weight (last pass): {tot_w}")
-    print(f"cache: {svc.stats}")
+    print(f"total solution weight (last pass): {tot_w} "
+          f"({n_err} per-request errors)")
+    s = svc.stats
+    print(f"cache: hits={s['cache_hits']} misses={s['cache_misses']} "
+          f"evictions={s['cache_evictions']} errors={s['cache_errors']} "
+          f"size={s['cache_size']} programs={s['programs']} "
+          f"compiles={s['compiles']}")
+    print(f"robustness: backend={s['backend']}"
+          f"{'' if s['backend_active'] == s['backend'] else ' -> ' + s['backend_active']} "
+          f"rejected={s['rejected']} repaired={s['repaired']} "
+          f"pack_errors={s['pack_errors']} solve_errors={s['solve_errors']} "
+          f"fallbacks={s['fallbacks']} "
+          f"verified={s['verify_checked']}/{s['verify_failures']} "
+          f"(checked/failed)")
 
 
 def main(argv=None) -> None:
@@ -81,6 +96,9 @@ def main(argv=None) -> None:
                     choices=("jnp", "blocked", "pallas"))
     ap.add_argument("--repeat-topologies", type=int, default=4,
                     help="requests sharing one topology (fresh weights)")
+    ap.add_argument("--verify", default="off",
+                    choices=("off", "sample", "full"),
+                    help="post-solve output audit (independence + weight)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 

@@ -1,0 +1,201 @@
+"""Deterministic fault-injection drills (the `chaos` lane).
+
+Proves the robustness claims the hardened runtime makes:
+
+  * bounded-staleness safety — delayed/dropped halo boards reach the SAME
+    fixpoint as the fault-free run (stale ghost weights stay valid upper
+    bounds, Lemma 4.2);
+  * restartability — a run killed mid-sweep and restored from its
+    `RedState` checkpoint finishes bit-identical to an uninterrupted run;
+  * detection — an injected monotonicity breach (weight bumped up) is
+    flagged by the harness's invariant checker;
+  * serving isolation — a poisoned batch yields per-request errors while
+    healthy instances solve bit-identically; a failing backend falls down
+    the `pallas → blocked → jnp` chain instead of failing the batch.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import distributed as D
+from repro.core import engine as E
+from repro.core import partition as part
+from repro.core import serve as SV
+from repro.core import validate as VAL
+from repro.core.graph import Graph
+from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.fault import (
+    FaultPlan, InjectedFault, run_union_reduction,
+)
+from repro.graphs.generators import gnm, random_graph
+from tests.helpers import SMALL_PAD
+
+pytestmark = pytest.mark.chaos
+
+
+def _problem(seed, p=2):
+    g = random_graph(12, 0.3, seed=seed)
+    pg = part.partition_graph(g, p, window_cap=8, common_cap=4,
+                              pad_to=SMALL_PAD)
+    cfg = D.DisReduConfig(heavy_k=6, mode="sync", max_rounds=200)
+    return D.build_union_problem(pg, cfg.backend), cfg
+
+
+def _final(state):
+    return np.asarray(state.w), np.asarray(state.status)
+
+
+# --------------------------------------------------------------------- #
+# bounded-staleness: delays and drops do not change the fixpoint
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_same_fixpoint_under_injected_delays(seed):
+    prob, cfg = _problem(seed)
+    base, _, rep0 = run_union_reduction(prob, cfg)
+    assert rep0["fixpoint"] and not rep0["violations"]
+    for fseed in range(3):
+        plan = FaultPlan.random_delay(fseed, p=2)
+        st, _, rep = run_union_reduction(prob, cfg, faults=plan)
+        assert rep["fixpoint"], f"no fixpoint under {plan}"
+        assert not rep["violations"]
+        bw, bs = _final(base)
+        fw, fs = _final(st)
+        assert np.array_equal(bw, fw) and np.array_equal(bs, fs), \
+            f"fixpoint diverged under {plan}"
+
+
+def test_same_fixpoint_under_dropped_boards():
+    prob, cfg = _problem(seed=5)
+    base, _, _ = run_union_reduction(prob, cfg)
+    plan = FaultPlan(drop_pe=1, drop_rounds=2, drop_from=0)
+    st, _, rep = run_union_reduction(prob, cfg, faults=plan)
+    assert rep["fixpoint"] and not rep["violations"]
+    assert any(e[0] == "dropped" for e in rep["events"])
+    assert np.array_equal(*map(np.asarray, (base.w, st.w)))
+    assert np.array_equal(*map(np.asarray, (base.status, st.status)))
+
+
+# --------------------------------------------------------------------- #
+# kill + restore: bit-identical restart from a RedState checkpoint
+# --------------------------------------------------------------------- #
+
+
+def test_restart_from_checkpoint_is_bit_identical(tmp_path):
+    from repro.core import rules as R
+
+    prob, cfg = _problem(seed=7)
+    base, _, _ = run_union_reduction(prob, cfg)
+
+    ck = CheckpointManager(str(tmp_path / "ck"))
+    with pytest.raises(InjectedFault):
+        run_union_reduction(prob, cfg, faults=FaultPlan(kill_round=1),
+                            ckpt=ck, save_every=1)
+    step = ck.latest_step()
+    assert step is not None
+
+    template = R.init_state(prob.w0, prob.is_local, prob.is_ghost)
+    restored = ck.restore(template)
+    st, _, rep = run_union_reduction(prob, cfg, state=restored,
+                                     start_round=step + 1)
+    assert rep["fixpoint"]
+    assert np.array_equal(np.asarray(base.w), np.asarray(st.w))
+    assert np.array_equal(np.asarray(base.status), np.asarray(st.status))
+    assert np.array_equal(np.asarray(base.offset), np.asarray(st.offset))
+
+
+# --------------------------------------------------------------------- #
+# detection: an injected monotonicity breach is flagged
+# --------------------------------------------------------------------- #
+
+
+def test_weight_corruption_is_detected():
+    prob, cfg = _problem(seed=9)
+    plan = FaultPlan(seed=1, corrupt_pe=0, corrupt_round=0)
+    _, _, rep = run_union_reduction(prob, cfg, faults=plan)
+    assert any(e[0] == "corrupted" for e in rep["events"])
+    assert any(v[0] == "weight_increased" for v in rep["violations"])
+
+
+def test_fault_free_run_matches_disredu_reference():
+    g = random_graph(12, 0.3, seed=11)
+    pg = part.partition_graph(g, 2, window_cap=8, common_cap=4,
+                              pad_to=SMALL_PAD)
+    cfg = D.DisReduConfig(heavy_k=6, mode="sync", max_rounds=200)
+    prob = D.build_union_problem(pg, cfg.backend)
+    harness_state, _, rep = run_union_reduction(prob, cfg)
+    ref_state, _, _ = D.disredu(pg, cfg)
+    assert rep["fixpoint"]
+    assert np.array_equal(np.asarray(harness_state.w),
+                          np.asarray(ref_state.w))
+    assert np.array_equal(np.asarray(harness_state.status),
+                          np.asarray(ref_state.status))
+
+
+# --------------------------------------------------------------------- #
+# serving isolation: poisoned batches and failing backends
+# --------------------------------------------------------------------- #
+
+
+def test_poisoned_batch_isolates_per_request():
+    svc = SV.MWISService(SV.ServeConfig(backend="jnp"))
+    good = [gnm(20, 40, seed=s) for s in range(3)]
+    nan_g = Graph(indptr=np.array([0, 1, 2]),
+                  indices=np.array([1, 0], np.int32),
+                  weights=np.array([np.nan, 1.0]))
+    big = svc.cells[-1].L + 1
+    oversize = Graph(indptr=np.zeros(big + 1, np.int64),
+                     indices=np.zeros(0, np.int32),
+                     weights=np.ones(big, np.int32))
+    batch = [good[0], nan_g, good[1], oversize, good[2]]
+    results = svc.solve_batch(batch)
+
+    assert not results[1].ok and results[1].reason == VAL.REASON_BAD_WEIGHT
+    assert not results[3].ok and results[3].reason == VAL.REASON_OVERSIZE
+    assert results[3].members.shape == (big,) and not results[3].members.any()
+
+    # healthy requests solve bit-identically to an unpoisoned service
+    fresh = SV.MWISService(SV.ServeConfig(backend="jnp"))
+    want = fresh.solve_batch(good)
+    for got, ref in zip((results[0], results[2], results[4]), want):
+        assert got.ok and ref.ok
+        assert np.array_equal(got.members, ref.members)
+        assert got.weight == ref.weight
+    assert svc.stats["rejected"] == 2 and svc.stats["requests"] == 5
+
+
+def test_backend_fallback_chain_recovers():
+    start = "pallas" if "pallas" in E.BACKENDS else "blocked"
+    svc = SV.MWISService(SV.ServeConfig(backend=start, verify="full"))
+    real = SV.MWISService._execute_chunk
+
+    def flaky(self, cell, topos, backend):
+        if backend != "jnp":
+            raise RuntimeError(f"injected {backend} failure")
+        return real(self, cell, topos, backend)
+
+    svc._execute_chunk = flaky.__get__(svc)
+    g = gnm(20, 40, seed=0)
+    r = svc.solve_one(g)
+    assert r.ok and VAL.verify_result(g, r.members, r.weight).ok
+    st = svc.stats
+    assert st["backend"] == start and st["backend_active"] == "jnp"
+    assert st["fallbacks"] >= 1 and st["solve_errors"] == 0
+
+    # ...and the demotion is sticky: next request goes straight to jnp
+    before = st["fallbacks"]
+    r2 = svc.solve_one(gnm(20, 40, seed=1))
+    assert r2.ok and svc.stats["fallbacks"] == before
+
+
+def test_exhausted_fallback_chain_degrades_to_error():
+    svc = SV.MWISService(SV.ServeConfig(backend="jnp"))
+
+    def broken(self, cell, topos, backend):
+        raise RuntimeError("injected total failure")
+
+    svc._execute_chunk = broken.__get__(svc)
+    r = svc.solve_one(gnm(20, 40, seed=0))
+    assert not r.ok and r.reason == VAL.REASON_BACKEND_FAILED
+    assert svc.stats["solve_errors"] == 1

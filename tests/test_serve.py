@@ -57,6 +57,29 @@ def test_plan_cache_lru_eviction_bound():
     assert s.evictions == 1 and s.size == 2
 
 
+def test_plan_cache_raising_build_does_not_poison():
+    """A build() that raises leaves NO entry behind: the miss is counted
+    once, the error is counted, and a later successful build repopulates."""
+    c = E.PlanCache(max_entries=4)
+    calls = [0]
+
+    def bad():
+        calls[0] += 1
+        raise RuntimeError("boom")
+
+    with pytest.raises(RuntimeError, match="boom"):
+        c.get_or_build("k", bad)
+    s = c.stats
+    assert len(c) == 0            # nothing cached for "k"
+    assert s.misses == 1 and s.errors == 1 and s.hits == 0
+
+    assert c.get_or_build("k", lambda: 42) == 42   # retry rebuilds
+    assert c.get_or_build("k", bad) == 42          # now a hit; bad not called
+    assert calls[0] == 1
+    s = c.stats
+    assert s.errors == 1 and s.hits == 1 and s.misses == 2
+
+
 def test_topology_hash_semantics():
     g = gnm(30, 60, seed=0)
     row, col = g.edge_sources(), g.indices

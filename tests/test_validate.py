@@ -1,0 +1,268 @@
+"""Admission gate + verified outputs: canonicalize/reject semantics, the
+post-solve checker, and adversarial instances through the hardened service."""
+
+import numpy as np
+import pytest
+
+from repro.core import engine as E
+from repro.core import serve as SV
+from repro.core import validate as V
+from repro.core.graph import Graph, from_edge_list
+from repro.graphs.generators import gnm
+
+# --------------------------------------------------------------------- #
+# canonicalize: repairs
+# --------------------------------------------------------------------- #
+
+
+def _csr(n, pairs, w=None):
+    """Build a Graph from explicit DIRECTED (src, dst) pairs — unlike
+    from_edge_list this does NOT symmetrize/dedup, so tests can hand the
+    validator genuinely malformed edge lists."""
+    pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+    order = np.lexsort((pairs[:, 1], pairs[:, 0]))
+    pairs = pairs[order]
+    counts = np.bincount(pairs[:, 0], minlength=n)
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    weights = (np.arange(n, dtype=np.int32) + 1) if w is None \
+        else np.asarray(w)
+    return Graph(indptr=indptr, indices=pairs[:, 1].astype(np.int32),
+                 weights=weights)
+
+
+def test_canonical_graph_is_returned_by_identity():
+    g = from_edge_list(4, [(0, 1), (1, 2), (2, 3)],
+                       np.array([5, 1, 5, 1], np.int32))
+    fixed, rep = V.canonicalize(g)
+    assert rep.ok and rep.repairs == ()
+    assert fixed is g          # identity preserved → topology cache hits
+
+
+def test_self_loops_dropped():
+    g = _csr(3, [(0, 0), (0, 1), (1, 0), (2, 2)])
+    fixed, rep = V.canonicalize(g)
+    assert rep.ok and V.REPAIR_SELF_LOOPS in rep.repairs
+    src = fixed.edge_sources()
+    assert not np.any(src == fixed.indices)
+    # the 0–1 edge survives
+    assert fixed.num_directed_edges == 2
+
+
+def test_duplicate_and_asymmetric_edges_repaired():
+    g = _csr(3, [(0, 1), (0, 1), (1, 0), (1, 2)])   # dup 0→1, missing 2→1
+    fixed, rep = V.canonicalize(g)
+    assert rep.ok
+    assert V.REPAIR_DUP_EDGES in rep.repairs
+    assert V.REPAIR_SYMMETRIZED in rep.repairs
+    und = set(map(tuple, np.stack(
+        [fixed.edge_sources(), fixed.indices], 1).tolist()))
+    assert und == {(0, 1), (1, 0), (1, 2), (2, 1)}
+
+
+def test_unsorted_rows_resorted():
+    # row 0 lists neighbors out of order; edge *set* is already canonical
+    indptr = np.array([0, 2, 3, 4])
+    indices = np.array([2, 1, 0, 0], np.int32)
+    g = Graph(indptr=indptr, indices=indices,
+              weights=np.array([1, 2, 3], np.int32))
+    fixed, rep = V.canonicalize(g)
+    assert rep.ok and V.REPAIR_RESORTED in rep.repairs
+    assert np.array_equal(fixed.indices[:2], [1, 2])
+
+
+def test_integral_float_weights_cast():
+    g = Graph(indptr=np.array([0, 1, 2]), indices=np.array([1, 0], np.int32),
+              weights=np.array([3.0, 4.0]))
+    fixed, rep = V.canonicalize(g)
+    assert rep.ok and V.REPAIR_WEIGHT_CAST in rep.repairs
+    assert fixed.weights.dtype == np.int32
+
+
+# --------------------------------------------------------------------- #
+# canonicalize: rejects (stable reason codes)
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("weights,why", [
+    (np.array([np.nan, 1.0]), "nan"),
+    (np.array([np.inf, 1.0]), "inf"),
+    (np.array([1.5, 2.0]), "non-integral"),
+    (np.array([-1, 2], np.int64), "negative"),
+    (np.array([2**40, 2], np.int64), "overflow"),
+])
+def test_bad_weights_rejected(weights, why):
+    g = Graph(indptr=np.array([0, 1, 2]), indices=np.array([1, 0], np.int32),
+              weights=weights)
+    fixed, rep = V.canonicalize(g)
+    assert fixed is None and not rep.ok, why
+    assert rep.reason == V.REASON_BAD_WEIGHT
+
+
+def test_out_of_range_index_rejected():
+    g = Graph(indptr=np.array([0, 1, 2]), indices=np.array([5, 0], np.int32),
+              weights=np.array([1, 2], np.int32))
+    _, rep = V.canonicalize(g)
+    assert not rep.ok and rep.reason == V.REASON_BAD_INDEX
+
+
+@pytest.mark.parametrize("indptr", [
+    np.array([0, 2]),            # wrong length for n=2
+    np.array([1, 1, 2]),         # indptr[0] != 0
+    np.array([0, 2, 1]),         # non-monotone
+    np.array([0, 1, 5]),         # indptr[-1] != len(indices)
+])
+def test_broken_csr_rejected(indptr):
+    g = Graph(indptr=indptr, indices=np.array([1, 0], np.int32),
+              weights=np.array([1, 2], np.int32))
+    _, rep = V.canonicalize(g)
+    assert not rep.ok and rep.reason == V.REASON_BAD_CSR
+
+
+def test_validate_instance_raises_with_reason():
+    g = Graph(indptr=np.array([0, 0]), indices=np.array([], np.int32),
+              weights=np.array([-3], np.int64))
+    with pytest.raises(V.InvalidInstance) as ei:
+        V.validate_instance(g)
+    assert ei.value.reason == V.REASON_BAD_WEIGHT
+
+
+# --------------------------------------------------------------------- #
+# verify_result
+# --------------------------------------------------------------------- #
+
+
+def test_verify_result_accepts_independent_set():
+    g = from_edge_list(4, [(0, 1), (1, 2), (2, 3)],
+                       np.array([5, 1, 5, 1], np.int32))
+    m = np.array([True, False, True, False])
+    rep = V.verify_result(g, m, 10)
+    assert rep.ok and rep.weight == 10
+
+
+def test_verify_result_flags_conflict_and_weight_mismatch():
+    g = from_edge_list(3, [(0, 1)], np.array([2, 3, 4], np.int32))
+    bad = np.array([True, True, False])
+    rep = V.verify_result(g, bad)
+    assert not rep.ok and "endpoint" in rep.detail
+    good = np.array([False, True, True])
+    rep2 = V.verify_result(g, good, weight=99)
+    assert not rep2.ok and rep2.reason == V.REASON_VERIFY_FAILED
+    assert rep2.weight == 7
+
+
+def test_verify_result_rejects_wrong_shape():
+    g = from_edge_list(3, [(0, 1)], np.array([2, 3, 4], np.int32))
+    assert not V.verify_result(g, np.array([True, False])).ok
+    assert not V.verify_result(g, np.array([1, 0, 1])).ok   # not bool
+
+
+# --------------------------------------------------------------------- #
+# adversarial instances through the hardened service
+# --------------------------------------------------------------------- #
+
+BACKENDS = [
+    b for b in ("jnp", "blocked", "pallas") if b in E.BACKENDS
+]
+
+
+@pytest.fixture(scope="module")
+def services():
+    return {
+        b: SV.MWISService(SV.ServeConfig(backend=b, verify="full"))
+        for b in BACKENDS
+    }
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_adversarial_instances_reject_not_crash(services, backend):
+    svc = services[backend]
+    nan_g = Graph(indptr=np.array([0, 1, 2]),
+                  indices=np.array([1, 0], np.int32),
+                  weights=np.array([np.nan, 1.0]))
+    neg_g = from_edge_list(2, [(0, 1)], np.array([-5, 1], np.int64))
+    loop_g = _csr(3, [(0, 0), (0, 1), (1, 0)],
+                  np.array([7, 3, 9], np.int32))
+    empty_g = from_edge_list(0, [], np.zeros(0, np.int32))
+    iso_g = from_edge_list(3, [], np.array([1, 2, 3], np.int32))
+    results = svc.solve_batch([nan_g, neg_g, loop_g, empty_g, iso_g])
+    assert not results[0].ok and results[0].reason == V.REASON_BAD_WEIGHT
+    assert not results[1].ok and results[1].reason == V.REASON_BAD_WEIGHT
+    # repaired + solved + verified
+    assert results[2].ok and results[2].weight == 9 + 7
+    assert results[3].ok and results[3].weight == 0
+    assert results[3].members.shape == (0,)
+    assert results[4].ok and results[4].weight == 6   # all isolated picked
+    for r in (r for r in results if r.ok and r.members.size):
+        assert r.members.dtype == np.bool_
+
+
+def test_oversize_reject_names_the_distributed_path():
+    svc = SV.MWISService(SV.ServeConfig())
+    big = svc.cells[-1].L + 1
+    g = from_edge_list(big, [], np.ones(big, np.int32))
+    r = svc.solve_one(g)
+    assert not r.ok and r.reason == V.REASON_OVERSIZE
+    assert "solvers.solve" in r.error
+    assert svc.stats["rejected"] == 1
+
+
+def test_verify_full_audits_every_request(services):
+    svc = services["jnp"]
+    before = svc.counters["verify_checked"]
+    gs = [gnm(20, 40, seed=s) for s in range(4)]
+    rs = svc.solve_batch(gs)
+    assert all(r.ok for r in rs)
+    assert svc.counters["verify_checked"] - before >= 4
+    assert svc.counters["verify_failures"] == 0
+
+
+# --------------------------------------------------------------------- #
+# hypothesis property: random adversarial CSR soup → reject or verified
+# --------------------------------------------------------------------- #
+
+
+def test_property_adversarial_soup():
+    pytest.importorskip("hypothesis")  # optional dep: skip, don't error
+    from hypothesis import given, settings, strategies as st
+
+    svc = SV.MWISService(SV.ServeConfig(backend="jnp", verify="full"))
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 100_000), st.booleans(), st.booleans(),
+           st.booleans(), st.booleans())
+    def prop(seed, add_loops, add_dups, drop_reverse, poison_weights):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(0, 16))
+        m = int(rng.integers(0, max(2 * n, 1)))
+        pairs = []
+        for _ in range(m):
+            u, v = int(rng.integers(0, max(n, 1))), \
+                int(rng.integers(0, max(n, 1)))
+            if u == v and not add_loops:
+                continue
+            pairs.append((u, v))
+            if not drop_reverse and u != v:
+                pairs.append((v, u))
+            if add_dups:
+                pairs.append((u, v))
+        w = rng.integers(1, 100, size=n).astype(np.int32)
+        if poison_weights and n:
+            w = w.astype(np.float64)
+            w[int(rng.integers(0, n))] = [np.nan, np.inf, -1.0, 0.5][
+                int(rng.integers(0, 4))]
+        g = _csr(n, pairs, w) if pairs else Graph(
+            indptr=np.zeros(n + 1, np.int64),
+            indices=np.zeros(0, np.int32), weights=w)
+        r = svc.solve_one(g)    # must never raise
+        if r.ok:
+            fixed, rep = V.canonicalize(g)
+            assert rep.ok
+            assert V.verify_result(fixed, r.members, r.weight).ok
+        else:
+            assert r.reason in (
+                V.REASON_BAD_WEIGHT, V.REASON_BAD_CSR, V.REASON_BAD_INDEX,
+            )
+            assert r.error and not np.any(r.members)
+
+    prop()
