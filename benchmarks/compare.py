@@ -93,6 +93,41 @@ def compare(baseline: dict, fresh: dict, threshold: float) -> dict:
                 elif regressed:
                     warnings.append(cell)
 
+    # ---- shape-descent columns (warn-only, never gate) ---------------- #
+    descent = None
+    descent_warnings: list[str] = []
+    bdesc, fdesc = baseline.get("descent"), fresh.get("descent")
+    if fdesc:
+        pc = fdesc.get("plan_cache") or {}
+        d_hits = pc.get("descent_hits", 0)
+        d_total = d_hits + pc.get("descent_misses", 0)
+        descent = dict(
+            graph=fdesc.get("graph"), cell=fdesc.get("cell"),
+            baseline_speedup=(bdesc or {}).get("speedup"),
+            fresh_speedup=fdesc.get("speedup"),
+            fresh_fixed_us=fdesc.get("fixed_us"),
+            fresh_descent_us=fdesc.get("descent_us"),
+            descents=fdesc.get("descents"),
+            bit_identical=fdesc.get("bit_identical"),
+            plan_cache_hit_rate=(round(d_hits / d_total, 3)
+                                 if d_total else None),
+            plan_cache=pc,
+            gated=False,
+        )
+        if fdesc.get("bit_identical") is False:
+            descent_warnings.append(
+                "descent members differ from fixed-shape path")
+        bsp, fsp = (bdesc or {}).get("speedup"), fdesc.get("speedup")
+        if bsp and fsp and fsp < bsp / threshold:
+            descent_warnings.append(
+                f"descent speedup dropped: {bsp} -> {fsp} "
+                f"(more than {threshold}x below baseline)")
+        if fsp is not None and fsp < 1.0:
+            descent_warnings.append(
+                f"descent slower than fixed shape (speedup {fsp})")
+    elif bdesc:
+        missing.append("descent section absent from fresh results")
+
     return dict(
         threshold=threshold,
         gated_labels=list(GATED_LABELS),
@@ -100,6 +135,8 @@ def compare(baseline: dict, fresh: dict, threshold: float) -> dict:
         warnings=warnings,
         missing=missing,
         cells=cells,
+        descent=descent,
+        descent_warnings=descent_warnings,
     )
 
 
@@ -129,6 +166,14 @@ def main(argv=None) -> int:
         print(f"WARN (ungated {c['label']}): {c['graph']}/{c['metric']} "
               f"{c['baseline_us']:.1f} -> {c['fresh_us']:.1f}us "
               f"(x{c['ratio']})")
+    for w in diff.get("descent_warnings", []):
+        print(f"WARN (descent, ungated): {w}")
+    if diff.get("descent"):
+        d = diff["descent"]
+        print(f"descent: speedup={d['fresh_speedup']} "
+              f"(baseline {d['baseline_speedup']}) "
+              f"descents={d['descents']} "
+              f"plan_cache_hit_rate={d['plan_cache_hit_rate']}")
     for c in diff["regressions"]:
         print(f"REGRESSION: {c['graph']}/{c['metric']}/{c['label']} "
               f"{c['baseline_us']:.1f} -> {c['fresh_us']:.1f}us "

@@ -150,6 +150,109 @@ def _bench_graph(name, g, p, *, schedule: str, with_pallas: bool,
     return row
 
 
+def _bench_descent(small: bool = False) -> dict:
+    """Fixed-shape vs shape-descent end-to-end greedy solve on a
+    serve_m-sized instance (the ISSUE's target cell), plus the per-round
+    alive-vertex/stage-time trajectory of both paths.
+
+    The trajectory rows come from ``solve_staged(..., trajectory=True)``
+    with one-round stages — an empty ladder keeps the fixed path at the
+    input shape while still reporting per-round alive counts.  The timed
+    comparison runs each path monolithically (no per-round readback), and
+    asserts the two member masks are bit-identical.
+    """
+    import numpy as np
+
+    from repro.configs import base as CFG
+    from repro.core import distributed as D
+    from repro.core import partition as part
+    from repro.core import solvers as SOL
+    from repro.core.graph import from_edge_list
+    from repro.graphs import generators as gen
+
+    cell = CFG.MWIS_SHAPES["serve_m"]
+    n = int(cell["L"] * 0.8)
+    # bulk + hard kernel: a random bulk that greedy decides in a couple of
+    # rounds, plus a weight-ramp path whose greedy frontier advances ~one
+    # vertex per round — the motivating serve_m workload (the kernel
+    # collapses to a small fraction fast, then the solver grinds on it)
+    n_kernel = 200
+    n_bulk = n - n_kernel
+    bulk = gen.gnm(n_bulk, 3 * n_bulk, seed=11)
+    bsrc = bulk.edge_sources()
+    und = bsrc < bulk.indices
+    pairs = np.stack([bsrc[und], bulk.indices[und]], axis=1).astype(np.int64)
+    chain = np.arange(n_bulk, n - 1, dtype=np.int64)
+    pairs = np.concatenate(
+        [pairs, np.stack([chain, chain + 1], axis=1)], axis=0)
+    weights = np.concatenate([
+        np.asarray(bulk.weights, np.int64),
+        np.arange(1, n_kernel + 1, dtype=np.int64),   # the ramp
+    ]).astype(np.int32)
+    g = from_edge_list(n, pairs, weights)
+    pad = dict(L=cell["L"], E=cell["E"], G=cell["G"], B=cell["B"],
+               S=cell["S"])
+    algo, p = "greedy", 1
+    pg = part.partition_graph(g, p, window_cap=cell["D"],
+                              common_cap=cell["Dc"], pad_to=pad)
+    cfg_fixed = D.DisReduConfig(mode="sync", heavy_k=8)
+    cfg_desc = D.DisReduConfig(mode="sync", heavy_k=8, descent=True,
+                               descent_every=2)
+    cfg_traj = D.DisReduConfig(mode="sync", heavy_k=8, descent=True,
+                               descent_every=1)
+
+    def run(cfg, **kw):
+        return SOL.solve_staged(g, p, algo, cfg, pg=pg, **kw)
+
+    # per-round trajectories (stage = 1 round; empty ladder = never move)
+    _, st_tf = run(cfg_traj, ladder=(), trajectory=True)
+    _, st_td = run(cfg_traj, trajectory=True)
+
+    # end-to-end timing, warm then min-of-reps (same topology → plan
+    # cache + jit caches hot, exactly the serving steady state)
+    reps = 2 if small else 4
+    m_fixed, _ = run(cfg_fixed)
+    m_desc, st_d = run(cfg_desc)
+    t_fixed = t_desc = float("inf")
+    for _ in range(reps):
+        _, st = run(cfg_fixed)
+        t_fixed = min(t_fixed, st["t_total"])
+        _, st = run(cfg_desc)
+        t_desc = min(t_desc, st["t_total"])
+    assert (m_fixed == m_desc).all(), \
+        "shape descent changed the greedy solution"
+
+    # descent plan reuse: run the blocked-backend descent path twice on one
+    # shared PlanCache — the second solve's descent plans must all hit
+    from repro.core import engine as E
+    cache = E.PlanCache(max_entries=64)
+    cfg_blk = D.DisReduConfig(mode="sync", heavy_k=8, backend="blocked",
+                              descent=True, descent_every=2)
+    m_blk, _ = SOL.solve_staged(g, p, algo, cfg_blk, pg=pg,
+                                plan_cache=cache)
+    SOL.solve_staged(g, p, algo, cfg_blk, pg=pg, plan_cache=cache)
+    assert (m_blk == m_fixed).all(), \
+        "blocked-backend descent diverged from jnp"
+    cs = cache.stats
+    return {
+        "graph": f"bulk_ramp_n{n}", "n": g.n, "m": g.m, "p": p,
+        "algo": algo, "cell": "serve_m",
+        "fixed_us": round(t_fixed * 1e6, 1),
+        "descent_us": round(t_desc * 1e6, 1),
+        "speedup": round(t_fixed / max(t_desc, 1e-9), 2),
+        "descents": st_d["descents"],
+        "path": [e["cell"] for e in st_d["path"]],
+        "bit_identical": True,
+        "plan_cache": {
+            "hits": cs.hits, "misses": cs.misses,
+            "descent_hits": cs.descent_hits,
+            "descent_misses": cs.descent_misses,
+        },
+        "trajectory_fixed": st_tf["stages"],
+        "trajectory_descent": st_td["stages"],
+    }
+
+
 def run_engine_bench(out_path: str = "BENCH_engine.json",
                      seed_oracle=None, small: bool = False) -> dict:
     from repro.graphs import generators as gen
@@ -188,9 +291,13 @@ def run_engine_bench(out_path: str = "BENCH_engine.json",
                     "(plan-build-time autotune); greedy_round_us / "
                     "rnp_round_us time one solver round (step + halo "
                     "exchange [+ peel]) per backend, blocked rounds on "
-                    "the autotuned plan",
+                    "the autotuned plan; 'descent' compares the "
+                    "fixed-shape vs shape-descent end-to-end greedy solve "
+                    "on a serve_m-sized instance (bit-identical members) "
+                    "with per-round alive/time trajectories",
         },
         "results": results,
+        "descent": _bench_descent(small=small),
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)

@@ -178,8 +178,8 @@ def bench_kernel_micro() -> Iterator[Row]:
 
 
 def bench_kernel_compaction() -> Iterator[Row]:
-    """Beyond-paper §Perf H3.4: kernel compaction between reduce rounds
-    (static-shape analogue of the paper's dependency checking)."""
+    """Beyond-paper §Perf H3.4: adaptive shape descent between reduce
+    stages (static-shape analogue of the paper's dependency checking)."""
     import time as _t
 
     from repro.core import distributed as D, partition as part, solvers as S
@@ -187,20 +187,22 @@ def bench_kernel_compaction() -> Iterator[Row]:
 
     g = gen.rgg2d(6000, avg_deg=8, seed=3)
     cfg = D.DisReduConfig(mode="async", heavy_k=8)
+    dcfg = D.DisReduConfig(mode="async", heavy_k=8, descent=True,
+                           descent_every=2)
     S.solve(part.partition_graph(g, 8, window_cap=16), "rnp", cfg)  # warm
     t0 = _t.perf_counter()
     m1, _ = S.solve(part.partition_graph(g, 8, window_cap=16), "rnp", cfg)
     t_plain = _t.perf_counter() - t0
-    S.solve_compact(g, 8, "rnp", cfg, pre_rounds=2)  # warm
+    S.solve_staged(g, 8, "rnp", dcfg)  # warm
     t0 = _t.perf_counter()
-    m2, st = S.solve_compact(g, 8, "rnp", cfg, pre_rounds=2)
+    m2, st = S.solve_staged(g, 8, "rnp", dcfg)
     t_comp = _t.perf_counter() - t0
     w1, w2 = g.set_weight(m1), g.set_weight(m2)
     yield ("compaction/plain_rnp/p8", t_plain * 1e6, f"w={w1}")
     yield (
-        "compaction/compact_rnp/p8", t_comp * 1e6,
+        "compaction/descent_rnp/p8", t_comp * 1e6,
         f"w={w2};speedup={t_plain / max(t_comp, 1e-9):.2f}x;"
-        f"kernel={st['kernel_ratio']:.3f}",
+        f"descents={st['descents']};kernel={st['kernel_ratio']:.3f}",
     )
 
 

@@ -91,6 +91,41 @@ def run_serve_bench(out_path: str, small: bool = False) -> dict:
               f"verify_full={ips_v} ({overhead}% overhead)",
               flush=True)
 
+    # ---- shape-descent rows: biggest cell, fixed vs descent="auto" ---- #
+    # (the staged path solves per-instance, so this also measures the
+    # descent overhead against the batched fixed-shape program)
+    descent_rows = []
+    d_cell = cells[-1]
+    d_plan = [("jnp", 1)] if small else [("jnp", 1), ("blocked", 1)]
+    nt, rp = (1, 2) if small else (2, 3)
+    for backend, batch in d_plan:
+        reqs = _instance_stream(d_cell, nt, rp, seed=23)
+        batches = [reqs[i:i + batch] for i in range(0, len(reqs), batch)]
+        svc_off = SV.MWISService(
+            SV.ServeConfig(algo="rg", backend=backend, max_batch=batch))
+        svc_on = SV.MWISService(
+            SV.ServeConfig(algo="rg", backend=backend, max_batch=batch,
+                           descent="auto", descent_min_L=d_cell.L))
+        stats_off = SV.measure_throughput(svc_off, batches, warmup=1)
+        stats_on = SV.measure_throughput(svc_on, batches, warmup=1)
+        s = svc_on.stats
+        row = dict(
+            cell=d_cell.name, backend=backend, batch=batch,
+            instances_per_sec_fixed=stats_off["instances_per_sec"],
+            instances_per_sec_descent=stats_on["instances_per_sec"],
+            p50_ms_fixed=stats_off["p50_ms"],
+            p50_ms_descent=stats_on["p50_ms"],
+            descent_solves=s["descent_solves"], descents=s["descents"],
+            oversize_admitted=s["oversize_admitted"],
+            cache_descent_hits=s["cache_descent_hits"],
+            cache_descent_misses=s["cache_descent_misses"],
+        )
+        descent_rows.append(row)
+        print(f"serve-descent/{d_cell.name}/{backend}/b{batch},"
+              f"fixed={row['instances_per_sec_fixed']} "
+              f"descent={row['instances_per_sec_descent']} inst/s "
+              f"(descents={row['descents']})", flush=True)
+
     payload = dict(
         meta=dict(
             unit="sustained instances/sec + per-batch latency ms, steady "
@@ -104,8 +139,13 @@ def run_serve_bench(out_path: str, small: bool = False) -> dict:
             verify_note="instances_per_sec_verify_full re-runs the same "
                         "stream with ServeConfig.verify='full' (post-solve "
                         "independence + weight audit on every request)",
+            descent_note="descent rows compare the batched fixed-shape "
+                         "program against the per-instance shape-descent "
+                         "path (ServeConfig.descent='auto') on the "
+                         "biggest serve cell",
         ),
         results=results,
+        descent=descent_rows,
     )
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)

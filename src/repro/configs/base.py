@@ -89,7 +89,26 @@ MWIS_SHAPES: Dict[str, Dict[str, Any]] = {
     "serve_m": dict(kind="serve", L=1024, E=16384, G=4, B=4, S=4, D=8,
                     Dc=4, schedule="cheap-fused",
                     seg_blk=dict(r_blk=32, e_blk=320)),
+    # shape-descent cells: rungs of the static ladder the staged solver
+    # re-packs the alive kernel onto mid-solve (solvers.solve_staged).
+    # They extend the serve cells upward so instances too big for serve_m
+    # get a descent entry point and become admissible once their kernel
+    # fits a serve cell.  G/B/S are floors only — compaction keeps the
+    # exact per-PE maxima when they exceed the floor; never mesh dry-run
+    # workloads (excluded from ARCH.shapes like the serve cells).
+    "descent_l": dict(kind="descent", L=4096, E=65536, G=64, B=64, S=64,
+                      D=8, Dc=4, schedule="cheap-fused",
+                      seg_blk=dict(r_blk=32, e_blk=512)),
+    "descent_xl": dict(kind="descent", L=16384, E=262144, G=128, B=128,
+                       S=128, D=8, Dc=4, schedule="cheap-fused",
+                       seg_blk=dict(r_blk=32, e_blk=1024)),
 }
+
+#: Ladder order (ascending) used by solvers.solve_staged when no explicit
+#: ladder is given: serve cells first, then the descent extensions.
+MWIS_DESCENT_LADDER = (
+    "serve_xs", "serve_s", "serve_m", "descent_l", "descent_xl",
+)
 
 #: Static batch-size buckets of the serving layer: a request batch is
 #: padded up to the smallest admissible size so (cell × batch) programs

@@ -48,10 +48,11 @@ def _build(shape_name, mesh, fsdp, overrides=None):
 ARCH = base.ArchDef(
     arch_id="mwis",
     family="mwis",
-    # serve cells are single-PE buckets of the batched serving front end
-    # (repro.core.serve), not mesh dry-run workloads
+    # serve cells are single-PE buckets of the batched serving front
+    # end (repro.core.serve) and descent cells are mid-solve re-pack rungs
+    # (repro.core.solvers.solve_staged) — neither is a mesh dry-run workload
     shapes=tuple(s for s, m in base.MWIS_SHAPES.items()
-                 if m.get("kind") != "serve"),
+                 if m.get("kind") not in ("serve", "descent")),
     build=_build,
     smoke=smoke,
 )

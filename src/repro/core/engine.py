@@ -335,7 +335,9 @@ class PlanCacheStats(NamedTuple):
     misses: int
     evictions: int
     size: int
-    errors: int = 0   # build() raises observed by get_or_build
+    errors: int = 0        # build() raises observed by get_or_build
+    descent_hits: int = 0    # tag="descent" lookups served from cache
+    descent_misses: int = 0  # tag="descent" lookups that (re)built
 
 
 class PlanCache:
@@ -350,6 +352,7 @@ class PlanCache:
         self.max_entries = max_entries
         self._d: OrderedDict = OrderedDict()
         self._hits = self._misses = self._evictions = self._errors = 0
+        self._descent_hits = self._descent_misses = 0
 
     def __len__(self) -> int:
         return len(self._d)
@@ -357,13 +360,23 @@ class PlanCache:
     def __contains__(self, key) -> bool:
         return key in self._d
 
-    def get(self, key):
-        """Value for `key` (refreshing recency) or None on miss."""
+    def get(self, key, tag: Optional[str] = None):
+        """Value for `key` (refreshing recency) or None on miss.
+
+        ``tag="descent"`` additionally counts the lookup in the descent
+        hit/miss counters (stats telemetry for mid-solve re-packs); the
+        cache contents are tag-agnostic, so a plan built by the fixed-shape
+        path is a hit for a descent lookup of the same topology.
+        """
         if key in self._d:
             self._d.move_to_end(key)
             self._hits += 1
+            if tag == "descent":
+                self._descent_hits += 1
             return self._d[key]
         self._misses += 1
+        if tag == "descent":
+            self._descent_misses += 1
         return None
 
     def put(self, key, value) -> None:
@@ -374,7 +387,7 @@ class PlanCache:
             self._d.popitem(last=False)
             self._evictions += 1
 
-    def get_or_build(self, key, build):
+    def get_or_build(self, key, build, tag: Optional[str] = None):
         """Cached value for `key`, calling `build()` (and caching) on miss.
 
         A raising ``build()`` leaves the cache **unpoisoned**: no entry is
@@ -382,7 +395,7 @@ class PlanCache:
         is counted exactly once, the failure is counted in
         ``stats.errors``, and the exception propagates to the caller.
         """
-        val = self.get(key)
+        val = self.get(key, tag=tag)
         if val is None:
             try:
                 val = build()
@@ -398,6 +411,8 @@ class PlanCache:
             hits=self._hits, misses=self._misses,
             evictions=self._evictions, size=len(self._d),
             errors=self._errors,
+            descent_hits=self._descent_hits,
+            descent_misses=self._descent_misses,
         )
 
 
@@ -407,9 +422,12 @@ def plan_for(
     col: Optional[np.ndarray] = None, gid: Optional[np.ndarray] = None,
     window: Optional[np.ndarray] = None,
     win_adj_bits: Optional[np.ndarray] = None,
+    tag: Optional[str] = None,
 ) -> SegPlan:
     """:func:`build_plan` through a :class:`PlanCache` keyed by topology
-    hash (plus the static build knobs).  ``cache=None`` builds uncached."""
+    hash (plus the static build knobs).  ``cache=None`` builds uncached.
+    ``tag="descent"`` marks the lookup in the cache's descent counters
+    (shape-descent re-packs share the same key space as cold packs)."""
     if cache is None:
         return build_plan(
             row, n_rows, r_blk=r_blk, col=col, gid=gid, window=window,
@@ -422,7 +440,7 @@ def plan_for(
     return cache.get_or_build(key, lambda: build_plan(
         row, n_rows, r_blk=r_blk, col=col, gid=gid, window=window,
         win_adj_bits=win_adj_bits,
-    ))
+    ), tag=tag)
 
 
 # --------------------------------------------------------------------- #

@@ -104,11 +104,10 @@ class ServeCell(NamedTuple):
     e_blk: int  # blocked-ELL edge-budget floor (high-water mark seed)
 
 
-def serve_cells() -> Tuple[ServeCell, ...]:
-    """The bucket table, ascending by capacity."""
+def _cells_of_kind(kind: str) -> Tuple[ServeCell, ...]:
     cells = []
     for name, meta in CFG.MWIS_SHAPES.items():
-        if meta.get("kind") != "serve":
+        if meta.get("kind") != kind:
             continue
         seg = meta.get("seg_blk", {})
         cells.append(ServeCell(
@@ -120,6 +119,18 @@ def serve_cells() -> Tuple[ServeCell, ...]:
         ))
     cells.sort(key=lambda c: (c.L, c.E))
     return tuple(cells)
+
+
+def serve_cells() -> Tuple[ServeCell, ...]:
+    """The bucket table, ascending by capacity."""
+    return _cells_of_kind("serve")
+
+
+def descent_entry_cells() -> Tuple[ServeCell, ...]:
+    """kind="descent" MWIS_SHAPES rows — oversize *entry* shapes for the
+    staged path (never batched; a solve entering here descends into the
+    serve cells as soon as reduction shrinks the kernel)."""
+    return _cells_of_kind("descent")
 
 
 def bucket_for(n: int, directed_edges: int,
@@ -212,6 +223,12 @@ class ServeConfig:
     validate: bool = True         # canonicalize/reject requests on admission
     verify: str = "off"           # post-solve audit: off | sample | full
     fallback: bool = True         # walk FALLBACK_CHAIN on backend failure
+    # --- shape descent (solvers.solve_staged) ------------------------- #
+    descent: str = "off"          # off | auto — big cells take the staged
+                                  # path and shrink mid-solve
+    descent_min_L: int = 1024     # smallest cell L routed through descent
+                                  # (default: serve_m and up)
+    descent_every: int = 2        # stage length between descent checks
 
 
 class MWISService:
@@ -236,8 +253,15 @@ class MWISService:
                 f"unknown verify mode {cfg.verify!r}; "
                 "available: ('off', 'sample', 'full')"
             )
+        if cfg.descent not in ("off", "auto"):
+            raise ValueError(
+                f"unknown descent mode {cfg.descent!r}; "
+                "available: ('off', 'auto')"
+            )
         self.cfg = cfg
         self.cells = tuple(cells) if cells is not None else serve_cells()
+        self.descent_cells = descent_entry_cells() \
+            if cfg.descent == "auto" else ()
         if not self.cells:
             raise ValueError("no serve cells configured (MWIS_SHAPES has "
                              "no kind='serve' rows)")
@@ -251,7 +275,8 @@ class MWISService:
         self.counters = dict(
             requests=0, rejected=0, repaired=0, pack_errors=0,
             solve_errors=0, fallbacks=0, verify_checked=0,
-            verify_failures=0,
+            verify_failures=0, descent_solves=0, descents=0,
+            oversize_admitted=0,
         )
         self.events: List[tuple] = []   # (kind, detail) robustness log
 
@@ -403,6 +428,51 @@ class MWISService:
                     or (self.cfg.verify == "sample" and k == 0))
             return
 
+    def _solve_staged_one(self, g: Graph, cell: ServeCell) -> ServeResult:
+        """One instance through the shape-descent path
+        (:func:`repro.core.solvers.solve_staged`): enter at ``cell``'s
+        shape, shrink onto smaller serve cells as reduction collapses the
+        kernel.  Descent plans go through the shared :class:`PlanCache`
+        (counted in ``cache_descent_*``).  Same isolation contract as the
+        batched path: never raises, walks the backend fallback chain."""
+        cfg = self.cfg
+        sched = cfg.schedule or cell.schedule
+        while True:
+            backend = self._backend
+            dcfg = SOL.DisReduConfig(
+                heavy_k=cfg.heavy_k, use_heavy=cfg.use_heavy, mode="sync",
+                max_rounds=cfg.max_rounds, schedule=sched, backend=backend,
+                r_blk=None if backend == "jnp" else cell.r_blk,
+                descent=True, descent_every=cfg.descent_every,
+            )
+            try:
+                members, st = SOL.solve_staged(
+                    g, 1, cfg.algo, dcfg, plan_cache=self.cache,
+                    pad_to=dict(L=cell.L, G=cell.G, E=cell.E, B=cell.B,
+                                S=cell.S),
+                    window_cap=cell.D, common_cap=cell.Dc,
+                )
+            except Exception as e:  # noqa: BLE001 — degrade, don't abort
+                chain = FALLBACK_CHAIN[self.cfg.backend]
+                pos = chain.index(backend) if backend in chain else len(chain)
+                nxt = chain[pos + 1] if pos + 1 < len(chain) else None
+                if nxt is None or not self.cfg.fallback:
+                    self.counters["solve_errors"] += 1
+                    self.events.append(
+                        ("backend_failed", cell.name, backend, str(e)))
+                    return _error_result(
+                        g.n, V.REASON_BACKEND_FAILED,
+                        f"backend {backend!r} failed with no fallback "
+                        f"left: {e}")
+                self.counters["fallbacks"] += 1
+                self.events.append(("fallback", backend, nxt, str(e)))
+                self._backend = nxt
+                continue
+            self.counters["descent_solves"] += 1
+            self.counters["descents"] += int(st["descents"])
+            return self._finish_result(
+                g, members, check=self.cfg.verify in ("sample", "full"))
+
     def _finish_result(
         self, g: Graph, mask: np.ndarray, check: bool
     ) -> ServeResult:
@@ -427,6 +497,7 @@ class MWISService:
         codes while the rest of the batch solves normally.
         """
         order: Dict[str, List[int]] = {}
+        staged: List[Tuple[int, ServeCell]] = []
         cells_by_name = {c.name: c for c in self.cells}
         admitted: List[Graph] = list(graphs)
         out: List[Optional[ServeResult]] = [None] * len(graphs)
@@ -453,11 +524,29 @@ class MWISService:
             try:
                 cell = bucket_for(g.n, g.num_directed_edges, self.cells)
             except ValueError as e:
-                self.counters["rejected"] += 1
-                self.events.append(("rejected", V.REASON_OVERSIZE, str(e)))
-                out[i] = _error_result(g.n, V.REASON_OVERSIZE, str(e))
+                # oversize for every serve cell — with descent on, admit
+                # through a kind="descent" entry shape (staged path only)
+                dcell = None
+                if self.descent_cells:
+                    try:
+                        dcell = bucket_for(g.n, g.num_directed_edges,
+                                           self.descent_cells)
+                    except ValueError:
+                        dcell = None
+                if dcell is None:
+                    self.counters["rejected"] += 1
+                    self.events.append(
+                        ("rejected", V.REASON_OVERSIZE, str(e)))
+                    out[i] = _error_result(g.n, V.REASON_OVERSIZE, str(e))
+                    continue
+                self.counters["oversize_admitted"] += 1
+                staged.append((i, dcell))
                 continue
-            order.setdefault(cell.name, []).append(i)
+            if (self.cfg.descent == "auto"
+                    and cell.L >= self.cfg.descent_min_L):
+                staged.append((i, cell))
+            else:
+                order.setdefault(cell.name, []).append(i)
 
         for cell_name, idxs in order.items():
             cell = cells_by_name[cell_name]
@@ -465,6 +554,8 @@ class MWISService:
                 self._solve_chunk(
                     cell, idxs[c0 : c0 + self.cfg.max_batch], admitted, out
                 )
+        for i, cell in staged:
+            out[i] = self._solve_staged_one(admitted[i], cell)
         return out  # type: ignore[return-value]
 
     def solve_one(self, g: Graph) -> ServeResult:
@@ -477,6 +568,8 @@ class MWISService:
             cache_hits=s.hits, cache_misses=s.misses,
             cache_evictions=s.evictions, cache_size=s.size,
             cache_errors=s.errors,
+            cache_descent_hits=s.descent_hits,
+            cache_descent_misses=s.descent_misses,
             programs=len(self._batched_fns), compiles=self.compiles,
             e_blk_hwm=dict(self._eblk_hwm),
             backend=self.cfg.backend, backend_active=self._backend,

@@ -18,7 +18,7 @@ for the union (single-device simulation) and shard_map (production) paths.
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -265,86 +265,382 @@ def solve(
 
 
 # --------------------------------------------------------------------- #
-# shard_map instantiation (production / dry-run)
+# staged solve with adaptive shape descent (kernel compaction)
 # --------------------------------------------------------------------- #
-def solve_compact(
+class LadderCell(NamedTuple):
+    """One rung of the static shape ladder (serve/descent MWIS_SHAPES
+    cells, or ad-hoc test cells).  L/E gate admission; G/B/S floor the
+    halo pads (the exact per-PE maxima override them); r_blk picks the
+    blocked-ELL row-block height for plans packed at this rung."""
+
+    name: str
+    L: int
+    E: int
+    G: int = 4
+    B: int = 4
+    S: int = 4
+    r_blk: Optional[int] = None
+
+
+def default_ladder() -> Tuple[LadderCell, ...]:
+    """The configured descent ladder: serve cells + descent extensions
+    from ``configs.base.MWIS_SHAPES``, ascending."""
+    from repro.configs import base as CFG
+
+    cells = []
+    for name in CFG.MWIS_DESCENT_LADDER:
+        m = CFG.MWIS_SHAPES[name]
+        cells.append(LadderCell(
+            name=name, L=m["L"], E=m["E"], G=m["G"], B=m["B"], S=m["S"],
+            r_blk=m.get("seg_blk", {}).get("r_blk"),
+        ))
+    return tuple(sorted(cells, key=lambda c: (c.L, c.E)))
+
+
+class _Frame(NamedTuple):
+    """Pre-descent snapshot: the full-shape state (with its fold log) and
+    the aux needed to replay reconstruction at that level."""
+
+    state: R.RedState
+    aux: R.Aux
+    is_local: jax.Array
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("phase", "iters", "heavy_k", "use_heavy", "sweeps",
+                     "p", "schedule", "backend"),
+)
+def _stage_union_jit(state, is_ghost, aux, halo, plan, *, phase, iters,
+                     heavy_k, use_heavy, sweeps, p, schedule, backend):
+    """One bounded solver stage on the union layout.
+
+    phase='reduce' — ≤ `iters` DisRedu rounds; returns (state, rounds,
+    changed_last) so the host loop can tell fixpoint (changed False) from
+    budget exhaustion even at iters=1.
+    phase='greedy' — ≤ `iters` weighted-Luby rounds; returns (state,
+    rounds, remaining).
+    phase='peel'   — exactly one HtWIS peel per PE (no exchange! ghosts
+    are stale until the next reduce round's exchange, which is why the
+    staged driver never descends right after a peel).
+
+    Resuming a phase across stage boundaries is exact: reduce rounds are
+    idempotent at fixpoint, greedy re-evaluates `remaining` from the
+    statuses, and the rnp loop body is reduce-to-fixpoint + peel — so
+    chunked execution visits bit-identical states to the monolithic
+    while_loops in :func:`run_algorithm`.
+    """
+    prob = UnionProblem(state.w, aux.is_local, is_ghost, aux, halo, p, 0,
+                        plan)
+    ctx = _union_ctx(prob, backend)
+    if phase == "reduce":
+        cfg = DisReduConfig(
+            heavy_k=heavy_k, use_heavy=use_heavy,
+            mode="sync" if sweeps >= 1_000_000 else "async",
+            stale_sweeps=sweeps, schedule=schedule, backend=backend,
+            max_rounds=iters,
+        )
+
+        def body(carry):
+            state, rounds, _ = carry
+            snap_s, snap_w = state.status, state.w
+            state = local_reduce(
+                state, aux, heavy_k=cfg.heavy_k, use_heavy=cfg.use_heavy,
+                max_sweeps=cfg.sweeps_per_round, schedule=cfg.schedule,
+                backend=cfg.backend, plan=plan,
+            )
+            state, _ = ctx.exchange(state)
+            changed = (state.status != snap_s).any() | (state.w != snap_w).any()
+            return state, rounds + 1, changed
+
+        def cond(carry):
+            _, rounds, changed = carry
+            return changed & (rounds < iters)
+
+        return jax.lax.while_loop(
+            cond, body, (state, jnp.zeros((), jnp.int32), jnp.ones((), bool))
+        )
+    if phase == "greedy":
+        def body(carry):
+            state, rounds, _ = carry
+            state = greedy_step(state, aux, backend=backend, plan=plan)
+            state, _ = ctx.exchange(state)
+            remaining = (aux.is_local & (state.status == UNDECIDED)).any()
+            return state, rounds + 1, remaining
+
+        def cond(carry):
+            _, rounds, remaining = carry
+            return remaining & (rounds < iters)
+
+        remaining0 = (aux.is_local & (state.status == UNDECIDED)).any()
+        return jax.lax.while_loop(
+            cond, body, (state, jnp.zeros((), jnp.int32), remaining0)
+        )
+    if phase != "peel":
+        raise ValueError(f"unknown stage phase {phase!r}")
+    score = peel_score(state, aux, backend=backend, plan=plan)
+    state = ctx.peel(state, score)
+    remaining = (aux.is_local & (state.status == UNDECIDED)).any()
+    return state, jnp.zeros((), jnp.int32), remaining
+
+
+#: Host-side stitching calls reconstruction once per descent level; jit it
+#: (the monolithic path compiles it into the solve program).
+_reconstruct_jit = jax.jit(R.reconstruct_members)
+
+
+def _pick_cell(ladder, need, cur_L, cur_E, factor):
+    """Smallest ladder cell the kernel fits that is a real descent
+    (hysteresis: cell.L * factor <= current L, never grow E)."""
+    for c in sorted(ladder, key=lambda c: (c.L, c.E)):
+        if (c.L * max(factor, 1) <= cur_L and c.E <= cur_E
+                and c.L >= need["L"] and c.E >= need["E"]):
+            return c
+    return None
+
+
+def solve_staged(
     g,
     p: int,
     algo: str,
     cfg: DisReduConfig = DisReduConfig(),
     *,
-    pre_rounds: int = 2,
+    ladder=None,
+    plan_cache: Optional[E.PlanCache] = None,
+    pad_to=None,
     window_cap: int = 16,
+    common_cap: int = 4,
+    edge_balanced: bool = True,
+    ckpt=None,
+    resume: bool = False,
+    on_descent=None,
+    trajectory: bool = False,
+    pg: Optional[PartitionedGraph] = None,
 ) -> Tuple[np.ndarray, dict]:
-    """Beyond-paper driver (EXPERIMENTS §Perf H3 next-step): kernel
-    compaction.
+    """Staged solve with adaptive **shape descent** (kernel compaction).
 
-    The paper prunes redundant rule tests with dependency checking; under
-    static shapes every sweep still pays for the full padded instance.
-    This driver runs `pre_rounds` DisRedu rounds, *extracts the kernel*
-    (alive vertices with their current weights), repartitions the much
-    smaller residual, solves it with `algo`, and stitches the solution
-    back through the phase-1 reconstruction — later sweeps cost ∝ kernel
-    size instead of input size.  Exactness is unchanged: the kernel is an
-    equivalent instance by the paper's Theorems 4.x.
+    Replaces the old two-phase ``solve_compact`` experiment.  The solve
+    runs in bounded *stages* (``cfg.descent_every`` rounds each); at every
+    post-exchange stage boundary the alive kernel is measured
+    (:func:`distributed.kernel_shape`) and, when it fits a smaller rung of
+    the static shape `ladder` with hysteresis ``cfg.descent_factor``, the
+    partition is *restricted* onto that cell
+    (:func:`partition.compact_partition`), re-packed through
+    ``engine.plan_for`` (descent plans hit the topology-keyed PlanCache,
+    tagged in ``PlanCacheStats.descent_*``), and the solve continues at
+    the smaller shape — so late rounds pay for the kernel, not the input.
 
-    Returns (global member mask, stats).
+    Bit-identity: compaction is an exact restriction (preserved ownership,
+    window positions, gids), stage chunking visits the same states as the
+    monolithic loops, and decisions stitch back through the per-level fold
+    logs — members equal :func:`solve` on the same partition, bit for bit
+    (for every algo/backend/schedule; descent off ⇒ literally one stage).
+
+    ``ckpt`` (a ``distributed.checkpoint.CheckpointManager``) saves the
+    frame stack + current state at every descent boundary; ``resume=True``
+    restores the latest boundary and replays the deterministic compaction
+    chain host-side before continuing.  ``on_descent(descents, cell_name)``
+    is the test/fault seam, called after each committed descent.
+
+    Returns ``(global member mask, stats)`` with stats keys: descents,
+    path, kernel_ratio, alive_final, stages (when ``trajectory``).
     """
     import time as _time
 
+    from repro.core import distributed as D
     from repro.core import partition as _part
-    from repro.core.distributed import disredu, kernel_stats
 
-    t0 = _time.time()
-    pg = _part.partition_graph(g, p, window_cap=window_cap)
-    pre_cfg = DisReduConfig(
-        heavy_k=cfg.heavy_k, use_heavy=cfg.use_heavy, mode=cfg.mode,
-        stale_sweeps=cfg.stale_sweeps, exchange=cfg.exchange,
-        schedule=cfg.schedule, backend=cfg.backend, max_rounds=pre_rounds,
-    )
-    state, prob, rounds = disredu(pg, pre_cfg)
-    nv, ne = kernel_stats(pg, state)
-    t_phase1 = _time.time() - t0
+    ladder = tuple(ladder) if ladder is not None else default_ladder()
+    t0 = _time.perf_counter()
+    if pg is None:
+        pg = _part.partition_graph(
+            g, p, edge_balanced=edge_balanced, window_cap=window_cap,
+            common_cap=common_cap, pad_to=pad_to,
+        )
+    n = pg.n_global
+    frames: list = []
+    path = [dict(cell="input", L=int(pg.L), E=int(pg.E))]
+    descents = 0
+    stages: list = []
+    min_ratio = 1.0
+    budget = cfg.max_rounds
 
-    status = np.asarray(state.status)
-    w = np.asarray(state.w)
-    is_local = np.asarray(prob.is_local)
-    gids = np.asarray(prob.aux.gid)
+    def _r_blk_for(cell) -> Optional[int]:
+        if cfg.backend == "jnp":
+            return None
+        return cell.r_blk if (cell is not None and cell.r_blk) else cfg.r_blk
 
-    alive_g = np.zeros(g.n, dtype=bool)
-    w_g = np.zeros(g.n, dtype=np.int64)
-    sel = (status == UNDECIDED) & is_local
-    alive_g[gids[sel]] = True
-    w_g[gids[sel]] = w[sel]
+    def _build(pg_, cell=None, tag=None):
+        return build_union_problem(
+            pg_, cfg.backend, _r_blk_for(cell), plan_cache, plan_tag=tag,
+        )
 
-    members = np.zeros(g.n, dtype=bool)
-    if alive_g.any():
-        # induced residual with CURRENT (possibly folded-down) weights
-        sub, old_ids = g.induced_subgraph(alive_g)
-        sub = type(sub)(indptr=sub.indptr, indices=sub.indices,
-                        weights=w_g[old_ids].astype(np.int32))
-        pg2 = _part.partition_graph(sub, p, window_cap=window_cap)
-        members2, _ = solve(pg2, algo, cfg)
-        members[old_ids[members2]] = True
+    prob = _build(pg)
+    state = R.init_state(prob.w0, prob.is_local, prob.is_ghost)
+    phase = "greedy" if algo == "greedy" else "reduce"
 
-    # stitch back: phase-2 decisions seed the phase-1 reconstruction
-    status2 = status.copy()
-    member_of_gid = np.zeros(g.n + 1, dtype=bool)
-    member_of_gid[:g.n] = members
-    und = status == UNDECIDED
-    decided_in = member_of_gid[np.where(gids >= 0, gids, g.n)] & und
-    status2[und] = EXCLUDED
-    status2[decided_in] = INCLUDED
-    st2 = state._replace(status=jnp.asarray(status2.astype(np.int8)))
-    in_set = np.asarray(R.reconstruct_members(st2, prob.aux))
-    out = np.zeros(g.n, dtype=bool)
-    keep = in_set & is_local
-    out[gids[keep]] = True
+    if resume and ckpt is not None and ckpt.latest_step() is not None:
+        man = ckpt.manifest()
+        extra = man["extra"]
+        tmpl = {
+            "state": D.state_template(int(extra["union_v"][-1])),
+            "frames": [D.state_template(int(v))
+                       for v in extra["union_v"][:-1]],
+        }
+        tree = ckpt.restore(tmpl)
+        by_name = {c.name: c for c in ladder}
+        pg_k, prob_k = pg, prob
+        for k, fs in enumerate(tree["frames"]):
+            fs = R.RedState(*[jnp.asarray(x) for x in fs])
+            frames.append(_Frame(state=fs, aux=prob_k.aux,
+                                 is_local=prob_k.is_local))
+            pg_k = _part.compact_partition(
+                pg_k, np.asarray(fs.status), np.asarray(fs.w),
+                pad_to=extra["dims"][k],
+            )
+            prob_k = _build(pg_k, by_name.get(extra["path"][k + 1]["cell"]),
+                            tag="descent")
+        pg, prob = pg_k, prob_k
+        state = R.RedState(*[jnp.asarray(x) for x in tree["state"]])
+        phase = extra["phase"]
+        budget = int(extra["budget"])
+        descents = int(extra["descents"])
+        path = list(extra["path"])
+        min_ratio = float(extra["min_ratio"])
+
+    def _alive() -> int:
+        status = np.asarray(state.status)
+        return int(((status == UNDECIDED) & np.asarray(prob.is_local)).sum())
+
+    def _save(cur_phase: str, cur_budget: int) -> None:
+        if ckpt is None:
+            return
+        tree = {"state": state, "frames": [f.state for f in frames]}
+        extra = dict(
+            kind="solve_staged", phase=cur_phase, budget=int(cur_budget),
+            descents=descents, path=path, min_ratio=min_ratio,
+            union_v=[int(f.state.w.shape[0]) for f in frames]
+                    + [int(state.w.shape[0])],
+            dims=[{k: int(path[j + 1][k]) for k in ("L", "E")}
+                  | dict(G=int(dmeta["G"]), B=int(dmeta["B"]),
+                         S=int(dmeta["S"]))
+                  for j, dmeta in enumerate(path[1:])],
+        )
+        ckpt.save(descents, tree, extra=extra)
+
+    def _run_stage(phase_name: str, iters: int):
+        nonlocal state
+        t = _time.perf_counter()
+        state, rounds, flag = _stage_union_jit(
+            state, prob.is_ghost, prob.aux, prob.halo, prob.plan,
+            phase=phase_name, iters=int(iters), heavy_k=cfg.heavy_k,
+            use_heavy=cfg.use_heavy, sweeps=cfg.sweeps_per_round, p=pg.p,
+            schedule=cfg.schedule, backend=cfg.backend,
+        )
+        jax.block_until_ready(state.status)
+        if trajectory:
+            stages.append(dict(
+                phase=phase_name, shape=path[-1]["cell"], L=int(pg.L),
+                rounds=int(rounds), alive=_alive(),
+                us=round((_time.perf_counter() - t) * 1e6, 1),
+            ))
+        return int(rounds), bool(flag)
+
+    def _maybe_descend(cur_phase: str, cur_budget: int) -> None:
+        nonlocal pg, prob, state, descents, min_ratio
+        if not cfg.descent:
+            return
+        status = np.asarray(state.status)
+        alive = int(((status == UNDECIDED)
+                     & np.asarray(prob.is_local)).sum())
+        if alive == 0:
+            return
+        min_ratio = min(min_ratio, alive / max(n, 1))
+        need = D.kernel_shape(pg, status)
+        cell = _pick_cell(ladder, need, pg.L, pg.E, cfg.descent_factor)
+        if cell is None or not D.ghosts_consistent(pg, status):
+            return
+        frames.append(_Frame(state=state, aux=prob.aux,
+                             is_local=prob.is_local))
+        pg = _part.compact_partition(
+            pg, status, np.asarray(state.w),
+            pad_to=dict(L=cell.L, E=cell.E, G=cell.G, B=cell.B, S=cell.S),
+        )
+        prob = _build(pg, cell, tag="descent")
+        state = R.init_state(prob.w0, prob.is_local, prob.is_ghost)
+        descents += 1
+        path.append(dict(cell=cell.name, L=int(pg.L), E=int(pg.E),
+                         G=int(pg.G), B=int(pg.B), S=int(pg.S)))
+        _save(cur_phase, cur_budget)
+        if on_descent is not None:
+            on_descent(descents, cell.name)
+
+    def _reduce_phase(left: int) -> int:
+        while left > 0:
+            iters = min(cfg.descent_every, left) if cfg.descent else left
+            rounds, changed = _run_stage("reduce", iters)
+            left -= rounds
+            _maybe_descend("reduce", left)
+            if not changed:
+                break
+        return left
+
+    def _greedy_phase() -> None:
+        while _alive():
+            iters = cfg.descent_every if cfg.descent else 100_000
+            _, remaining = _run_stage("greedy", iters)
+            _maybe_descend("greedy", 0)
+            if not remaining:
+                break
+
+    if algo == "reduce":
+        if phase == "reduce":
+            budget = _reduce_phase(budget)
+    elif algo == "greedy":
+        _greedy_phase()
+    elif algo == "rg":
+        if phase == "reduce":
+            budget = _reduce_phase(budget)
+            phase = "greedy"
+        _greedy_phase()
+    elif algo == "rnp":
+        while _alive():
+            _reduce_phase(budget)
+            budget = cfg.max_rounds
+            if not _alive():
+                break
+            _run_stage("peel", 1)
+    else:
+        raise ValueError(f"unknown algo {algo!r}")
+
+    # ---- stitch: reconstruct innermost-out through the frame stack ---- #
+    def _members_at(state_, aux_, is_local_) -> np.ndarray:
+        in_set = np.asarray(_reconstruct_jit(state_, aux_))
+        members = np.zeros(n, dtype=bool)
+        sel = in_set & np.asarray(is_local_)
+        members[np.asarray(aux_.gid)[sel]] = True
+        return members
+
+    members = _members_at(state, prob.aux, prob.is_local)
+    for fr in reversed(frames):
+        status = np.asarray(fr.state.status).copy()
+        gids = np.asarray(fr.aux.gid)
+        member_of_gid = np.zeros(n + 1, dtype=bool)
+        member_of_gid[:n] = members
+        und = status == UNDECIDED
+        decided_in = member_of_gid[np.where(gids >= 0, gids, n)] & und
+        status[und] = EXCLUDED
+        status[decided_in] = INCLUDED
+        st2 = fr.state._replace(status=jnp.asarray(status.astype(np.int8)))
+        members = _members_at(st2, fr.aux, fr.is_local)
+
     stats = dict(
-        pre_rounds=rounds, kernel_v=nv, kernel_e=ne,
-        kernel_ratio=nv / max(g.n, 1), t_phase1=t_phase1,
+        descents=descents, path=path, kernel_ratio=min_ratio,
+        alive_final=_alive(), t_total=_time.perf_counter() - t0,
     )
-    return out, stats
+    if trajectory:
+        stats["stages"] = stages
+    return members, stats
 
 
 def solver_shard_map_fn(pg: PartitionedGraph, cfg: DisReduConfig, mesh,

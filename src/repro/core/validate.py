@@ -74,6 +74,28 @@ def _reject(reason: str, detail: str) -> Tuple[None, ValidationReport]:
     return None, ValidationReport(False, reason, detail, ())
 
 
+def residual_weights(w, *, where: str = "residual") -> np.ndarray:
+    """Folded weight plane of a mid-solve residual, checked into int32.
+
+    Reduction folds rewrite weights (w(u) -= w(v), weight transfers), so a
+    residual extracted mid-solve carries *derived* weights that no input
+    gate ever saw.  The old ``solve_compact`` driver gathered them as int64
+    and silently ``.astype(np.int32)``-downcast — an overflow there wraps
+    negative and corrupts every later beat test.  This is the checked seam:
+    any value outside [0, I32_MAX] raises :class:`InvalidInstance` with the
+    stable ``bad_weight`` reason instead of wrapping.
+    """
+    w64 = np.asarray(w).astype(np.int64, copy=False)
+    if w64.size:
+        lo, hi = int(w64.min()), int(w64.max())
+        if lo < 0 or hi > I32_MAX:
+            raise InvalidInstance(
+                REASON_BAD_WEIGHT,
+                f"{where}: folded weights out of int32 range "
+                f"(min={lo}, max={hi})")
+    return w64.astype(np.int32)
+
+
 def canonicalize(g: Graph) -> Tuple[Optional[Graph], ValidationReport]:
     """Validate + canonicalize one instance; never raises.
 

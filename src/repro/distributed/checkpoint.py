@@ -124,6 +124,21 @@ class CheckpointManager:
         steps = self.list_steps()
         return steps[-1] if steps else None
 
+    def manifest(self, step: Optional[int] = None) -> Dict:
+        """The committed manifest for `step` (default: latest).
+
+        Exposes ``extra`` metadata without touching array shards — restore
+        flows whose *templates* depend on saved metadata (e.g. the staged
+        solver's per-descent-level state shapes) read this first, build
+        shape-correct templates, then call :meth:`restore`.
+        """
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        assert step is not None, "no committed checkpoint found"
+        d = os.path.join(self.root, f"step_{step:09d}")
+        with open(os.path.join(d, _MANIFEST)) as f:
+            return json.load(f)
+
     def restore(
         self, template: Any, step: Optional[int] = None, *,
         shardings: Any = None, verify: bool = True,

@@ -29,11 +29,13 @@ def _serve_mwis(args) -> None:
     from repro.graphs.generators import gnm
 
     cfg = SV.ServeConfig(algo=args.algo, backend=args.backend,
-                         max_batch=args.batch, verify=args.verify)
+                         max_batch=args.batch, verify=args.verify,
+                         descent=args.descent)
     svc = SV.MWISService(cfg)
     cells = svc.cells
     print(f"mwis service: algo={cfg.algo} backend={cfg.backend} "
-          f"verify={cfg.verify} batch<={cfg.max_batch} cells="
+          f"verify={cfg.verify} descent={cfg.descent} "
+          f"batch<={cfg.max_batch} cells="
           f"{[f'{c.name}(L={c.L},E={c.E})' for c in cells]}")
 
     # instance stream: cycle the cells, repeat each topology a few times
@@ -81,6 +83,11 @@ def _serve_mwis(args) -> None:
           f"fallbacks={s['fallbacks']} "
           f"verified={s['verify_checked']}/{s['verify_failures']} "
           f"(checked/failed)")
+    print(f"descent: mode={cfg.descent} "
+          f"solves={s['descent_solves']} descents={s['descents']} "
+          f"oversize_admitted={s['oversize_admitted']} "
+          f"plan_cache_hits={s['cache_descent_hits']}/"
+          f"{s['cache_descent_hits'] + s['cache_descent_misses']}")
 
 
 def main(argv=None) -> None:
@@ -99,6 +106,9 @@ def main(argv=None) -> None:
     ap.add_argument("--verify", default="off",
                     choices=("off", "sample", "full"),
                     help="post-solve output audit (independence + weight)")
+    ap.add_argument("--descent", default="off", choices=("off", "auto"),
+                    help="shape descent: big cells shrink mid-solve and "
+                         "oversize instances enter via descent cells")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 

@@ -105,6 +105,43 @@ def test_restart_from_checkpoint_is_bit_identical(tmp_path):
     assert np.array_equal(np.asarray(base.offset), np.asarray(st.offset))
 
 
+def test_restart_across_descent_boundary_is_bit_identical(tmp_path):
+    """Kill the staged solver right after a shape descent commits its
+    checkpoint; resume must replay the compaction chain from the manifest
+    and finish bit-identical to the uninterrupted run."""
+    from repro.core import solvers as S
+    from repro.graphs.generators import rgg2d
+
+    ladder = tuple(
+        S.LadderCell(name=f"t{L}", L=L, E=E, G=max(L // 2, 4),
+                     B=max(L // 4, 4), S=max(L // 4, 4))
+        for L, E in ((8, 128), (16, 256), (32, 512), (64, 1024),
+                     (128, 2048))
+    )
+    g = rgg2d(400, avg_deg=8, seed=13)
+    cfg = D.DisReduConfig(heavy_k=6, mode="sync", descent=True,
+                          descent_every=2)
+    m_ref, st_ref = S.solve_staged(g, 2, "rnp", cfg, window_cap=12,
+                                   ladder=ladder)
+    assert st_ref["descents"] >= 1
+
+    ck = CheckpointManager(str(tmp_path / "ck"), async_write=False)
+
+    def kill(descents, cell_name):
+        raise InjectedFault(f"killed after descent {descents}")
+
+    with pytest.raises(InjectedFault):
+        S.solve_staged(g, 2, "rnp", cfg, window_cap=12, ladder=ladder,
+                       ckpt=ck, on_descent=kill)
+    assert ck.latest_step() is not None
+    assert ck.manifest()["extra"]["kind"] == "solve_staged"
+
+    m_res, st_res = S.solve_staged(g, 2, "rnp", cfg, window_cap=12,
+                                   ladder=ladder, ckpt=ck, resume=True)
+    assert np.array_equal(m_ref, m_res)
+    assert st_res["path"] == st_ref["path"]
+
+
 # --------------------------------------------------------------------- #
 # detection: an injected monotonicity breach is flagged
 # --------------------------------------------------------------------- #
