@@ -140,6 +140,61 @@ def compare(baseline: dict, fresh: dict, threshold: float) -> dict:
     )
 
 
+def compare_serve(baseline: dict, fresh: dict, threshold: float) -> dict:
+    """Diff two BENCH_serve.json payloads on sustained instances/sec.
+
+    **Warn-only, never gates**: serving throughput on shared CI runners
+    is noisier than the normalized engine metrics, and the multidevice
+    rows run on forced-host CPU devices whose relative speed says nothing
+    about accelerators.  Rows are keyed (cell, backend, batch, devices);
+    committed baselines without a ``devices`` column compare as 1.
+    """
+    def key(r):
+        return (r.get("cell"), r.get("backend"), r.get("batch"),
+                r.get("devices", 1))
+
+    rows, warnings, missing = [], [], []
+    for section, tag in (("results", "serve"), ("multidevice", "serve-md")):
+        brows = {key(r): r for r in baseline.get(section) or []}
+        frows = {key(r): r for r in fresh.get(section) or []}
+        for k, br in sorted(brows.items()):
+            fr = frows.get(k)
+            b_ips = br.get("instances_per_sec")
+            if fr is None:
+                missing.append(f"{tag} {k} absent from fresh")
+                continue
+            f_ips = fr.get("instances_per_sec")
+            if not b_ips or f_ips is None:
+                continue
+            slowdown = (float(b_ips) / float(f_ips) if f_ips
+                        else float("inf"))
+            row = dict(
+                section=tag, cell=k[0], backend=k[1], batch=k[2],
+                devices=k[3],
+                baseline_ips=b_ips, fresh_ips=f_ips,
+                slowdown=round(slowdown, 3),
+                overlap_ratio=fr.get("overlap_ratio"),
+                pipelined_ips=fr.get("instances_per_sec_pipelined"),
+                gated=False,
+            )
+            rows.append(row)
+            if slowdown > threshold:
+                warnings.append(row)
+        for k in sorted(set(frows) - set(brows)):
+            fr = frows[k]
+            rows.append(dict(
+                section=tag, cell=k[0], backend=k[1], batch=k[2],
+                devices=k[3],
+                baseline_ips=None,
+                fresh_ips=fr.get("instances_per_sec"),
+                slowdown=None,
+                overlap_ratio=fr.get("overlap_ratio"),
+                pipelined_ips=fr.get("instances_per_sec_pipelined"),
+                gated=False,
+            ))
+    return dict(rows=rows, warnings=warnings, missing=missing)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="bench-regression gate (see module docstring)")
@@ -149,6 +204,10 @@ def main(argv=None) -> int:
         os.environ.get("BENCH_REGRESSION_THRESHOLD", DEFAULT_THRESHOLD)))
     ap.add_argument("--out", default="BENCH_diff.json",
                     help="where to write the full diff artifact")
+    ap.add_argument("--serve-baseline", default=None,
+                    help="committed BENCH_serve.json (warn-only section)")
+    ap.add_argument("--serve-fresh", default=None,
+                    help="freshly measured BENCH_serve.json (warn-only)")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
@@ -157,6 +216,13 @@ def main(argv=None) -> int:
         fresh = json.load(f)
 
     diff = compare(baseline, fresh, args.threshold)
+    if args.serve_baseline and args.serve_fresh:
+        with open(args.serve_baseline) as f:
+            serve_base = json.load(f)
+        with open(args.serve_fresh) as f:
+            serve_fresh = json.load(f)
+        diff["serve"] = compare_serve(serve_base, serve_fresh,
+                                      args.threshold)
     with open(args.out, "w") as f:
         json.dump(diff, f, indent=2)
 
@@ -174,6 +240,22 @@ def main(argv=None) -> int:
               f"(baseline {d['baseline_speedup']}) "
               f"descents={d['descents']} "
               f"plan_cache_hit_rate={d['plan_cache_hit_rate']}")
+    if diff.get("serve"):
+        sv = diff["serve"]
+        for w in sv["missing"]:
+            print(f"MISSING (serve, warn): {w}")
+        for r in sv["warnings"]:
+            print(f"WARN (serve, ungated): {r['section']}/{r['cell']}"
+                  f"/{r['backend']}/b{r['batch']}/d{r['devices']} "
+                  f"{r['baseline_ips']} -> {r['fresh_ips']} inst/s "
+                  f"(x{r['slowdown']} slower)")
+        for r in sv["rows"]:
+            extra = (f" overlap={r['overlap_ratio']}"
+                     if r.get("overlap_ratio") is not None else "")
+            print(f"serve: {r['section']}/{r['cell']}/{r['backend']}"
+                  f"/b{r['batch']}/d{r['devices']} "
+                  f"{r['fresh_ips']} inst/s "
+                  f"(baseline {r['baseline_ips']}){extra}")
     for c in diff["regressions"]:
         print(f"REGRESSION: {c['graph']}/{c['metric']}/{c['label']} "
               f"{c['baseline_us']:.1f} -> {c['fresh_us']:.1f}us "

@@ -9,15 +9,41 @@ Full mode covers every serve cell at two batch sizes on the jnp backend
 plus blocked and pallas-interpret on the smallest cell (the interpret
 rows are CPU-simulation numbers, not TPU projections).  ``small=True``
 is the CI shape: smallest cell only, jnp + blocked, few requests.
+
+Every row carries the per-stage breakdown (pack / H2D transfer / solve /
+fetch ms and the pipeline overlap ratio) from ``MWISService.stats``.
+Batch-4 rows get an ``instances_per_sec_pipelined`` column driven with
+multi-chunk calls (4 chunks per ``solve_batch``) so the overlapped host
+pipeline actually engages.  A ``devices=N`` multi-device section shards
+the batch axis over a ``serve`` mesh — when fewer devices are visible
+than requested the rows run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (CPU emulation:
+correctness + overlap surface, not real accelerator speedup).
 """
 
 from __future__ import annotations
 
 import json
 import os
+import subprocess
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+MULTIDEVICE_N = 4
+
+
+def _stage_cols(svc) -> dict:
+    """Per-stage timing columns of a driven service (cumulative)."""
+    s = svc.stats
+    return dict(
+        devices=s["devices"],
+        stage_ms=s["stage_ms"],
+        stage_p50_ms=s["stage_p50_ms"],
+        overlap_ratio=s["overlap_ratio"],
+        chunks=s["chunks"],
+        pipelined_chunks=s["pipelined_chunks"],
+    )
 
 
 def _instance_stream(cell, n_topologies: int, repeats: int, seed: int):
@@ -38,6 +64,71 @@ def _instance_stream(cell, n_topologies: int, repeats: int, seed: int):
             reqs.append(type(g)(indptr=g.indptr, indices=g.indices,
                                 weights=w))
     return reqs
+
+
+def _multidevice_rows(small: bool, devices: int) -> list:
+    """Benchmark rows with the batch axis sharded over ``devices``.
+
+    Must run in a process where ``jax.device_count() >= devices`` —
+    either real accelerators or CPU host devices forced via XLA_FLAGS.
+    Calls carry 4 chunks of ``batch`` requests so pipelining engages.
+    """
+    from repro.core import serve as SV
+
+    cells = SV.serve_cells()
+    if small:
+        plan = [(cells[0], 4, "jnp")]
+        n_chunks = 2
+    else:
+        plan = [(c, 4, "jnp") for c in cells]
+        plan += [(cells[min(1, len(cells) - 1)], 16, "jnp")]
+        n_chunks = 4
+    rows = []
+    for cell, batch, backend in plan:
+        svc = SV.MWISService(
+            SV.ServeConfig(algo="rg", backend=backend, max_batch=batch,
+                           devices=devices)
+        )
+        reqs = _instance_stream(cell, n_chunks, batch, seed=17)
+        stats = SV.measure_throughput(svc, [reqs], warmup=1)
+        rows.append(dict(
+            cell=cell.name, backend=backend, batch=batch,
+            L=cell.L, E=cell.E,
+            instances_per_sec=stats["instances_per_sec"],
+            p50_ms=stats["p50_ms"], p99_ms=stats["p99_ms"],
+            instances=stats["instances"],
+            **_stage_cols(svc),
+        ))
+    return rows
+
+
+def _multidevice_section(small: bool, devices: int = MULTIDEVICE_N) -> list:
+    """Multi-device rows, in-process when enough devices are visible,
+    else via a subprocess with forced CPU host devices.  Returns [] (with
+    a warning) if the subprocess fails — the rest of the bench stands."""
+    import jax
+
+    if jax.device_count() >= devices:
+        return _multidevice_rows(small, devices)
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       ".serve_md_rows.json")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={devices}"
+                        ).strip()
+    cmd = [sys.executable, os.path.abspath(__file__),
+           "--multidevice-child", out, str(devices)]
+    if small:
+        cmd.append("--small")
+    try:
+        subprocess.run(cmd, env=env, check=True, timeout=3600)
+        with open(out) as f:
+            rows = json.load(f)
+        os.remove(out)
+        return rows
+    except Exception as e:  # noqa: BLE001 — bench degrades, not dies
+        print(f"# multidevice section skipped: {e}", flush=True)
+        return []
 
 
 def run_serve_bench(out_path: str, small: bool = False) -> dict:
@@ -83,12 +174,28 @@ def run_serve_bench(out_path: str, small: bool = False) -> dict:
             p50_ms=stats["p50_ms"], p99_ms=stats["p99_ms"],
             instances=stats["instances"],
             cache=svc.stats,
+            **_stage_cols(svc),
         )
+        if batch >= 4 and backend == "jnp":
+            # multi-chunk calls (4 x batch requests, max_batch=batch) so
+            # chunk k+1's host pack/H2D hides under chunk k's solve
+            svc_p = SV.MWISService(
+                SV.ServeConfig(algo="rg", backend=backend, max_batch=batch)
+            )
+            reqs_p = _instance_stream(cell, 4, batch, seed=17)
+            stats_p = SV.measure_throughput(svc_p, [reqs_p], warmup=1)
+            row["instances_per_sec_pipelined"] = \
+                stats_p["instances_per_sec"]
+            row["overlap_ratio_pipelined"] = \
+                svc_p.stats["overlap_ratio"]
         results.append(row)
         print(f"serve/{cell.name}/{label}/b{batch},"
               f"{ips},"
               f"p50={stats['p50_ms']}ms p99={stats['p99_ms']}ms "
-              f"verify_full={ips_v} ({overhead}% overhead)",
+              f"verify_full={ips_v} ({overhead}% overhead)"
+              + (f" pipelined={row['instances_per_sec_pipelined']}"
+                 f" overlap={row['overlap_ratio_pipelined']}"
+                 if "instances_per_sec_pipelined" in row else ""),
               flush=True)
 
     # ---- shape-descent rows: biggest cell, fixed vs descent="auto" ---- #
@@ -126,6 +233,15 @@ def run_serve_bench(out_path: str, small: bool = False) -> dict:
               f"descent={row['instances_per_sec_descent']} inst/s "
               f"(descents={row['descents']})", flush=True)
 
+    # ---- multi-device rows: batch axis sharded over a serve mesh ------ #
+    md_rows = _multidevice_section(small)
+    for row in md_rows:
+        print(f"serve-md/{row['cell']}/{row['backend']}"
+              f"/b{row['batch']}/d{row['devices']},"
+              f"{row['instances_per_sec']},"
+              f"overlap={row['overlap_ratio']} "
+              f"stage_p50={row['stage_p50_ms']}", flush=True)
+
     payload = dict(
         meta=dict(
             unit="sustained instances/sec + per-batch latency ms, steady "
@@ -143,9 +259,16 @@ def run_serve_bench(out_path: str, small: bool = False) -> dict:
                          "program against the per-instance shape-descent "
                          "path (ServeConfig.descent='auto') on the "
                          "biggest serve cell",
+            multidevice_note=f"multidevice rows shard the batch axis over "
+                             f"a {MULTIDEVICE_N}-device serve mesh, driven "
+                             f"with multi-chunk calls so the host pipeline "
+                             f"engages; on CPU they run in a subprocess "
+                             f"with forced host devices (correctness + "
+                             f"overlap surface, not accelerator speedup)",
         ),
         results=results,
         descent=descent_rows,
+        multidevice=md_rows,
     )
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -154,6 +277,15 @@ def run_serve_bench(out_path: str, small: bool = False) -> dict:
 
 if __name__ == "__main__":
     small = "--small" in sys.argv
+    if "--multidevice-child" in sys.argv:
+        # child mode: XLA_FLAGS is already in the environment (set by the
+        # parent BEFORE this process imports jax) — write rows and exit
+        i = sys.argv.index("--multidevice-child")
+        child_out, devices = sys.argv[i + 1], int(sys.argv[i + 2])
+        rows = _multidevice_rows(small, devices)
+        with open(child_out, "w") as f:
+            json.dump(rows, f)
+        sys.exit(0)
     out = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
     run_serve_bench(out, small=small)
     print(f"# wrote {out}")

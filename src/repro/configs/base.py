@@ -79,16 +79,23 @@ MWIS_SHAPES: Dict[str, Dict[str, Any]] = {
     # min_pad floors (p=1 has no halo); D is the serve window cap;
     # seg_blk fixes the blocked-ELL row-block height per cell (batching
     # requires one shared r_blk) and e_blk floors the shared edge budget
-    # (the serving layer grows it as a high-water mark).
+    # (the serving layer grows it as a high-water mark).  serve_devices
+    # caps how many mesh devices the cell's batch axis is sharded over
+    # (None = whole serve mesh) and pipeline opts the cell out of the
+    # overlapped host pack/transfer pipeline (both consumed by
+    # repro.core.serve through the ServeCell rows).
     "serve_xs": dict(kind="serve", L=64, E=1024, G=4, B=4, S=4, D=8,
                      Dc=4, schedule="cheap-fused",
-                     seg_blk=dict(r_blk=8, e_blk=64)),
+                     seg_blk=dict(r_blk=8, e_blk=64),
+                     serve_devices=None, pipeline=True),
     "serve_s": dict(kind="serve", L=256, E=4096, G=4, B=4, S=4, D=8,
                     Dc=4, schedule="cheap-fused",
-                    seg_blk=dict(r_blk=16, e_blk=160)),
+                    seg_blk=dict(r_blk=16, e_blk=160),
+                    serve_devices=None, pipeline=True),
     "serve_m": dict(kind="serve", L=1024, E=16384, G=4, B=4, S=4, D=8,
                     Dc=4, schedule="cheap-fused",
-                    seg_blk=dict(r_blk=32, e_blk=320)),
+                    seg_blk=dict(r_blk=32, e_blk=320),
+                    serve_devices=None, pipeline=True),
     # shape-descent cells: rungs of the static ladder the staged solver
     # re-packs the alive kernel onto mid-solve (solvers.solve_staged).
     # They extend the serve cells upward so instances too big for serve_m

@@ -26,6 +26,16 @@ def rule_schedule(shape_name: str) -> str:
     return base.MWIS_SHAPES[shape_name].get("schedule", "cheap-fused")
 
 
+def serve_knobs(shape_name: str) -> dict:
+    """Per-cell multi-device serving knobs of a kind="serve" shape row:
+    ``serve_devices`` caps the batch-axis mesh for the cell (None = whole
+    serve mesh), ``pipeline`` opts the cell out of the overlapped host
+    pack/transfer pipeline.  Consumed by repro.core.serve.ServeCell."""
+    meta = base.MWIS_SHAPES[shape_name]
+    return dict(serve_devices=meta.get("serve_devices"),
+                pipeline=meta.get("pipeline", True))
+
+
 def serve_cell_names() -> tuple:
     """The single-PE serving buckets (kind="serve") of MWIS_SHAPES, in
     ascending size order — the bucket table of the batched front end."""

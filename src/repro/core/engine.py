@@ -466,16 +466,28 @@ def pad_plan(plan: SegPlan, e_blk: int) -> SegPlan:
 
 
 def stack_plans(plans: Sequence[SegPlan],
-                e_blk: Optional[int] = None) -> SegPlan:
+                e_blk: Optional[int] = None,
+                batch_multiple: int = 1) -> SegPlan:
     """Stack same-cell plans onto a leading batch axis (shared E_BLK).
 
     All plans must share ``r_blk`` and row count (same serve cell); each is
     padded to the common edge budget — `e_blk` if given (a high-water mark
     keeps recompiles monotone in the serving layer), else the batch max.
     Window payloads must be uniformly present or absent.
+
+    ``batch_multiple`` pads the batch axis up to a multiple of the given
+    count by repeating the LAST plan (phantom instances, matching the
+    serving layer's repeat-last request padding) so the stacked plan
+    splits evenly across a device mesh; phantom slots are sliced off by
+    the caller, never read back.
     """
     if not plans:
         raise ValueError("stack_plans needs at least one plan")
+    if batch_multiple < 1:
+        raise ValueError(f"batch_multiple must be >= 1, got {batch_multiple}")
+    if len(plans) % batch_multiple:
+        pad = batch_multiple - len(plans) % batch_multiple
+        plans = list(plans) + [plans[-1]] * pad
     r_blk = plans[0].r_blk
     nb = plans[0].edge_perm.shape[0]
     if any(p.r_blk != r_blk or p.edge_perm.shape[0] != nb for p in plans):

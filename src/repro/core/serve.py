@@ -33,6 +33,29 @@ The shared E_BLK is a per-(cell, batch) **high-water mark** — it only
 grows, so recompiles are monotone and bounded, and the padded slots are
 by construction ignored by the kernels (bit-identity is preserved).
 
+Multi-device serving (the throughput lever past one accelerator):
+
+  * **batch-axis sharding** — every instance in a stacked chunk is
+    independent, so the batch axis shards trivially over a flat ``serve``
+    mesh (:func:`repro.launch.mesh.make_serve_mesh`): the stacked arrays
+    are ``jax.device_put`` with a ``NamedSharding`` on their leading axis
+    and the jitted vmapped program runs SPMD (the only cross-device
+    traffic is the while-loop condition's OR-reduce, which only couples
+    trip counts — every round body is idempotent at its fixpoint, so the
+    per-instance results stay **bit-identical** to the single-device
+    path).  Batch sizes are rounded up to a multiple of the active device
+    count (phantom repeat-last instances, discarded on fetch) so shards
+    always split evenly and a ragged tail never compiles a one-off shape.
+  * **overlapped host pipeline** — within one ``solve_batch`` call the
+    chunks are double-buffered: while the device solves chunk *k*, the
+    host packs, stacks and transfers chunk *k+1* (jax dispatch is async,
+    so the weight refill + ``jnp.stack`` + H2D of the next chunk hide
+    under the in-flight solve instead of serializing with it — the same
+    communication/computation overlap DisReduA uses between PEs, applied
+    to the host→device edge).  Per-stage wall time (pack / transfer /
+    solve / fetch) and the achieved overlap ratio are recorded in
+    ``MWISService.stats``.
+
 Donation: the per-request weight planes are donated to the jitted batched
 solver on accelerator backends (buffer reuse for the hot serving loop);
 on CPU jax cannot donate, so the flag is elided to keep logs clean.
@@ -67,6 +90,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -102,6 +126,8 @@ class ServeCell(NamedTuple):
     schedule: str
     r_blk: int  # blocked-ELL row-block height (shared across the cell)
     e_blk: int  # blocked-ELL edge-budget floor (high-water mark seed)
+    serve_devices: Optional[int] = None  # batch-axis device cap (None=mesh)
+    pipeline: bool = True                # overlapped pack/transfer opt-out
 
 
 def _cells_of_kind(kind: str) -> Tuple[ServeCell, ...]:
@@ -116,6 +142,8 @@ def _cells_of_kind(kind: str) -> Tuple[ServeCell, ...]:
             schedule=meta.get("schedule", "cheap-fused"),
             r_blk=seg.get("r_blk", E.R_BLK),
             e_blk=seg.get("e_blk", E.E_BLK_MULTIPLE),
+            serve_devices=meta.get("serve_devices"),
+            pipeline=meta.get("pipeline", True),
         ))
     cells.sort(key=lambda c: (c.L, c.E))
     return tuple(cells)
@@ -208,6 +236,37 @@ def _error_result(n: int, reason: str, detail: str) -> ServeResult:
     )
 
 
+class _Staged(NamedTuple):
+    """A chunk stacked to its static batch shape and placed on the serve
+    mesh (device_put already issued), ready to launch."""
+
+    cell: ServeCell
+    backend: str
+    topos: Tuple[Topology, ...]   # the real (unpadded) chunk members
+    args: tuple                   # (w0s, is_local, is_ghost, auxs, halos,
+                                  #  plans) — leading axis = static batch
+    e_blk: int
+    rec: dict                     # per-chunk stage-timing record
+
+
+class _Inflight(NamedTuple):
+    """A launched chunk whose result is an unretired jax future."""
+
+    staged: _Staged
+    members: jax.Array            # async [bt, L+G+1] bool
+    t_dispatch: float
+
+
+class _Pending(NamedTuple):
+    """A dispatched pipeline chunk awaiting retirement.  ``inflight`` is
+    None when dispatch itself failed — the retire step then re-runs the
+    chunk through the synchronous fallback-chain path."""
+
+    inflight: Optional[_Inflight]
+    cell: ServeCell
+    good: List[int]
+
+
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     """Serving knobs (algo/backend/schedule as in DisReduConfig)."""
@@ -223,6 +282,11 @@ class ServeConfig:
     validate: bool = True         # canonicalize/reject requests on admission
     verify: str = "off"           # post-solve audit: off | sample | full
     fallback: bool = True         # walk FALLBACK_CHAIN on backend failure
+    # --- multi-device batch sharding + overlapped host pipeline ------- #
+    devices: Optional[int] = None  # serve-mesh size (None = every visible
+                                   # device; > visible raises at init)
+    pipeline: bool = True          # overlap pack/H2D of chunk k+1 with the
+                                   # in-flight solve of chunk k
     # --- shape descent (solvers.solve_staged) ------------------------- #
     descent: str = "off"          # off | auto — big cells take the staged
                                   # path and shrink mid-solve
@@ -258,6 +322,14 @@ class MWISService:
                 f"unknown descent mode {cfg.descent!r}; "
                 "available: ('off', 'auto')"
             )
+        visible = jax.device_count()
+        if cfg.devices is not None and not 1 <= cfg.devices <= visible:
+            raise ValueError(
+                f"serve devices={cfg.devices} exceeds the {visible} "
+                f"visible jax device(s) — launch with more devices or set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{cfg.devices} for CPU testing"
+            )
         self.cfg = cfg
         self.cells = tuple(cells) if cells is not None else serve_cells()
         self.descent_cells = descent_entry_cells() \
@@ -272,11 +344,18 @@ class MWISService:
         # active backend: starts at cfg.backend, demoted down
         # FALLBACK_CHAIN when a program build/execute fails
         self._backend = cfg.backend
+        self._ndev = cfg.devices if cfg.devices is not None else visible
+        self._meshes: Dict[int, object] = {}   # device count -> serve Mesh
+        self._stage_totals = dict(pack=0.0, transfer=0.0, solve=0.0,
+                                  fetch=0.0)       # cumulative ms per stage
+        self._stage_log: deque = deque(maxlen=2048)  # per-chunk timing recs
+        self._wall_s = 0.0                 # chunk-processing wall seconds
         self.counters = dict(
             requests=0, rejected=0, repaired=0, pack_errors=0,
             solve_errors=0, fallbacks=0, verify_checked=0,
             verify_failures=0, descent_solves=0, descents=0,
-            oversize_admitted=0,
+            oversize_admitted=0, chunks=0, pipelined_chunks=0,
+            pipeline_retries=0,
         )
         self.events: List[tuple] = []   # (kind, detail) robustness log
 
@@ -324,28 +403,101 @@ class MWISService:
         self.compiles += 1
         return fn
 
-    def _batch_size(self, k: int) -> int:
+    def _cell_ndev(self, cell: Optional[ServeCell]) -> int:
+        """Active device count for a cell's batch axis (cell cap ∧ mesh)."""
+        nd = max(1, self._ndev)
+        if cell is not None and cell.serve_devices:
+            nd = min(nd, cell.serve_devices)
+        return nd
+
+    def _sharding(self, nd: int):
+        """NamedSharding splitting a leading batch axis over nd devices."""
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        mesh = self._meshes.get(nd)
+        if mesh is None:
+            from repro.launch.mesh import make_serve_mesh
+
+            mesh = make_serve_mesh(nd)
+            self._meshes[nd] = mesh
+        return NamedSharding(mesh, PartitionSpec("serve"))
+
+    def _batch_size(self, k: int, cell: Optional[ServeCell] = None) -> int:
+        """Static batch size for a k-request chunk: the smallest admitted
+        bucket, rounded up to a multiple of the active device count so the
+        sharded batch axis always splits evenly (a ragged last shard would
+        otherwise pay a full recompile for its one-off padded shape)."""
+        nd = self._cell_ndev(cell)
+
+        def up(b: int) -> int:
+            return ((b + nd - 1) // nd) * nd
+
         for b in CFG.MWIS_SERVE_BATCH_SIZES:
             if b >= k and b <= self.cfg.max_batch:
-                return b
-        return min(max(CFG.MWIS_SERVE_BATCH_SIZES), self.cfg.max_batch)
+                return up(b)
+        return up(max(k, min(max(CFG.MWIS_SERVE_BATCH_SIZES),
+                             self.cfg.max_batch)))
 
     # ------------------------------------------------------------------ #
-    # solving
+    # solving: pack -> stage (stack + shard/H2D) -> launch -> fetch
     # ------------------------------------------------------------------ #
-    def _execute_chunk(
-        self, cell: ServeCell, topos: List[Topology], backend: str
-    ) -> List[np.ndarray]:
-        """Solve up to max_batch same-cell topologies; returns [n_i] masks.
+    def _new_rec(self, cell: ServeCell, backend: str,
+                 pipelined: bool) -> dict:
+        return dict(cell=cell.name, backend=backend, batch=0, devices=1,
+                    pipelined=pipelined, pack_ms=0.0, transfer_ms=0.0,
+                    solve_ms=0.0, fetch_ms=0.0)
 
-        Raises on program build/execute failure — `_solve_chunk` wraps it
-        with the fallback chain.  (Tests monkeypatch this seam to inject
-        backend failures.)
-        """
+    def _log_stages(self, rec: dict) -> None:
+        self.counters["chunks"] += 1
+        if rec["pipelined"]:
+            self.counters["pipelined_chunks"] += 1
+        for k in ("pack", "transfer", "solve", "fetch"):
+            self._stage_totals[k] += rec[k + "_ms"]
+        self._stage_log.append(dict(rec))
+
+    def _pack_requests(
+        self,
+        cell: ServeCell,
+        idxs: List[int],
+        graphs: List[Graph],
+        out: List[Optional[ServeResult]],
+        backend: str,
+    ) -> Tuple[List[Topology], List[int]]:
+        """Per-request host packing with fault isolation; failed requests
+        get error results in ``out`` and drop out of the chunk."""
+        topos: List[Topology] = []
+        good: List[int] = []
+        for i in idxs:
+            g = graphs[i]
+            try:
+                # per-request weight refill on a cached/fresh topology;
+                # a raising pack stays OUT of the cache (get_or_build)
+                topo = self._topology(g, cell, backend)
+                topos.append(Topology(
+                    prob=topo.prob._replace(
+                        w0=jnp.asarray(_weight_plane(g, cell))
+                    ),
+                    n=topo.n,
+                ))
+                good.append(i)
+            except Exception as e:  # noqa: BLE001 — isolate the request
+                self.counters["pack_errors"] += 1
+                self.events.append(("pack_error", cell.name, str(e)))
+                out[i] = _error_result(g.n, V.REASON_PACK_FAILED, str(e))
+        return topos, good
+
+    def _stage_chunk(
+        self, cell: ServeCell, topos: List[Topology], backend: str,
+        rec: dict,
+    ) -> "_Staged":
+        """Stack a chunk to its static batch size and place it: the batch
+        axis is padded to a device-count multiple with phantom repeat-last
+        instances (results sliced off on fetch) and device_put with a
+        ``serve``-mesh NamedSharding when more than one device is active."""
+        t0 = time.perf_counter()
         k = len(topos)
-        bt = self._batch_size(k)
-        pad = [topos[-1]] * (bt - k)          # repeat last; results dropped
-        batch = topos + pad
+        bt = self._batch_size(k, cell)
+        batch = list(topos) + [topos[-1]] * (bt - k)
 
         def stack(leaves):
             return jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
@@ -365,10 +517,52 @@ class MWISService:
             self._eblk_hwm[cell.name] = hwm
             plans = E.stack_plans([p.plan for p in probs], e_blk=hwm)
             e_blk = hwm
-        fn = self._batched_fn(cell, e_blk, backend)
-        members, _ = fn(w0s, is_local, is_ghost, auxs, halos, plans)
+        args = (w0s, is_local, is_ghost, auxs, halos, plans)
+        t1 = time.perf_counter()
+        nd = self._cell_ndev(cell)
+        if nd > 1:
+            args = jax.device_put(args, self._sharding(nd))
+        t2 = time.perf_counter()
+        rec["pack_ms"] += (t1 - t0) * 1e3
+        rec["transfer_ms"] += (t2 - t1) * 1e3
+        rec["batch"] = bt
+        rec["devices"] = nd
+        return _Staged(cell=cell, backend=backend, topos=tuple(topos),
+                       args=args, e_blk=e_blk, rec=rec)
+
+    def _launch_chunk(self, staged: "_Staged") -> "_Inflight":
+        """Dispatch the jitted vmapped solve; returns without blocking
+        (jax dispatch is async — the host is free to pack the next chunk
+        while this one runs on the device shards)."""
+        fn = self._batched_fn(staged.cell, staged.e_blk, staged.backend)
+        t0 = time.perf_counter()
+        members, _ = fn(*staged.args)
+        return _Inflight(staged=staged, members=members, t_dispatch=t0)
+
+    def _fetch_chunk(self, inflight: "_Inflight") -> List[np.ndarray]:
+        """Block on the in-flight solve and read back the [n_i] masks."""
+        rec = inflight.staged.rec
+        members = inflight.members.block_until_ready()
+        t1 = time.perf_counter()
+        rec["solve_ms"] += (t1 - inflight.t_dispatch) * 1e3
         members = np.asarray(members)
-        return [members[i, : t.n] for i, t in enumerate(topos)]
+        rec["fetch_ms"] += (time.perf_counter() - t1) * 1e3
+        self._log_stages(rec)
+        return [members[i, : t.n]
+                for i, t in enumerate(inflight.staged.topos)]
+
+    def _execute_chunk(
+        self, cell: ServeCell, topos: List[Topology], backend: str
+    ) -> List[np.ndarray]:
+        """Solve up to max_batch same-cell topologies; returns [n_i] masks.
+
+        Raises on program build/execute failure — `_solve_chunk` wraps it
+        with the fallback chain.  (Tests monkeypatch this seam to inject
+        backend failures.)
+        """
+        rec = self._new_rec(cell, backend, pipelined=False)
+        staged = self._stage_chunk(cell, topos, backend, rec)
+        return self._fetch_chunk(self._launch_chunk(staged))
 
     def _solve_chunk(
         self,
@@ -381,25 +575,8 @@ class MWISService:
         isolation and the backend fallback chain; fills ``out``."""
         while True:
             backend = self._backend
-            topos: List[Topology] = []
-            good: List[int] = []
-            for i in idxs:
-                g = graphs[i]
-                try:
-                    # per-request weight refill on a cached/fresh topology;
-                    # a raising pack stays OUT of the cache (get_or_build)
-                    topo = self._topology(g, cell, backend)
-                    topos.append(Topology(
-                        prob=topo.prob._replace(
-                            w0=jnp.asarray(_weight_plane(g, cell))
-                        ),
-                        n=topo.n,
-                    ))
-                    good.append(i)
-                except Exception as e:  # noqa: BLE001 — isolate the request
-                    self.counters["pack_errors"] += 1
-                    self.events.append(("pack_error", cell.name, str(e)))
-                    out[i] = _error_result(g.n, V.REASON_PACK_FAILED, str(e))
+            topos, good = self._pack_requests(cell, idxs, graphs, out,
+                                              backend)
             if not good:
                 return
             try:
@@ -427,6 +604,92 @@ class MWISService:
                     graphs[i], masks[k], check=(self.cfg.verify == "full")
                     or (self.cfg.verify == "sample" and k == 0))
             return
+
+    # ------------------------------------------------------------------ #
+    # the double-buffered chunk pipeline
+    # ------------------------------------------------------------------ #
+    def _dispatch_chunk(
+        self,
+        cell: ServeCell,
+        idxs: List[int],
+        graphs: List[Graph],
+        out: List[Optional[ServeResult]],
+    ) -> Optional["_Pending"]:
+        """Pack + stage + launch one chunk without blocking.  Returns None
+        when nothing in the chunk is solvable; a dispatch failure comes
+        back as a `_Pending` with ``inflight=None`` — retired by re-running
+        the chunk through the synchronous fallback-chain path."""
+        backend = self._backend
+        rec = self._new_rec(cell, backend, pipelined=True)
+        t0 = time.perf_counter()
+        topos, good = self._pack_requests(cell, idxs, graphs, out, backend)
+        rec["pack_ms"] += (time.perf_counter() - t0) * 1e3
+        if not good:
+            return None
+        try:
+            staged = self._stage_chunk(cell, topos, backend, rec)
+            inflight = self._launch_chunk(staged)
+        except Exception as e:  # noqa: BLE001 — degrade via the sync path
+            self.counters["pipeline_retries"] += 1
+            self.events.append(
+                ("pipeline_retry", cell.name, backend, str(e)))
+            return _Pending(inflight=None, cell=cell, good=good)
+        return _Pending(inflight=inflight, cell=cell, good=good)
+
+    def _retire_chunk(
+        self,
+        pending: "_Pending",
+        graphs: List[Graph],
+        out: List[Optional[ServeResult]],
+    ) -> None:
+        """Fetch a dispatched chunk and finish its results; any failure
+        (dispatch or in-flight) re-runs the chunk synchronously through
+        `_solve_chunk`, which owns the backend fallback chain."""
+        if pending.inflight is None:
+            self._solve_chunk(pending.cell, pending.good, graphs, out)
+            return
+        try:
+            masks = self._fetch_chunk(pending.inflight)
+        except Exception as e:  # noqa: BLE001 — degrade via the sync path
+            self.counters["pipeline_retries"] += 1
+            self.events.append(
+                ("pipeline_retry", pending.cell.name,
+                 pending.inflight.staged.backend, str(e)))
+            self._solve_chunk(pending.cell, pending.good, graphs, out)
+            return
+        for k, i in enumerate(pending.good):
+            out[i] = self._finish_result(
+                graphs[i], masks[k], check=(self.cfg.verify == "full")
+                or (self.cfg.verify == "sample" and k == 0))
+
+    def _run_chunks(
+        self,
+        chunks: List[Tuple[ServeCell, List[int]]],
+        graphs: List[Graph],
+        out: List[Optional[ServeResult]],
+    ) -> None:
+        """Run the batch's (cell, idxs) chunks, double-buffered: chunk
+        k+1 is packed/staged/launched while chunk k's solve is in flight,
+        so host work hides under device time.  Cells opted out of
+        pipelining (and single-chunk batches) take the synchronous path —
+        results are identical either way, only the overlap differs."""
+        t_wall = time.perf_counter()
+        pipe = self.cfg.pipeline and len(chunks) > 1
+        pending: Optional[_Pending] = None
+        for cell, idxs in chunks:
+            if not (pipe and cell.pipeline):
+                if pending is not None:
+                    self._retire_chunk(pending, graphs, out)
+                    pending = None
+                self._solve_chunk(cell, idxs, graphs, out)
+                continue
+            nxt = self._dispatch_chunk(cell, idxs, graphs, out)
+            if pending is not None:
+                self._retire_chunk(pending, graphs, out)
+            pending = nxt
+        if pending is not None:
+            self._retire_chunk(pending, graphs, out)
+        self._wall_s += time.perf_counter() - t_wall
 
     def _solve_staged_one(self, g: Graph, cell: ServeCell) -> ServeResult:
         """One instance through the shape-descent path
@@ -548,12 +811,12 @@ class MWISService:
             else:
                 order.setdefault(cell.name, []).append(i)
 
+        chunks: List[Tuple[ServeCell, List[int]]] = []
         for cell_name, idxs in order.items():
             cell = cells_by_name[cell_name]
             for c0 in range(0, len(idxs), self.cfg.max_batch):
-                self._solve_chunk(
-                    cell, idxs[c0 : c0 + self.cfg.max_batch], admitted, out
-                )
+                chunks.append((cell, idxs[c0 : c0 + self.cfg.max_batch]))
+        self._run_chunks(chunks, admitted, out)
         for i, cell in staged:
             out[i] = self._solve_staged_one(admitted[i], cell)
         return out  # type: ignore[return-value]
@@ -564,6 +827,17 @@ class MWISService:
     @property
     def stats(self) -> dict:
         s = self.cache.stats
+        stage_ms = {k: round(v, 3) for k, v in self._stage_totals.items()}
+        p50 = {}
+        for k in ("pack", "transfer", "solve", "fetch"):
+            vals = [r[k + "_ms"] for r in self._stage_log]
+            p50[k] = round(float(np.median(vals)), 3) if vals else 0.0
+        busy_ms = sum(self._stage_totals.values())
+        wall_ms = self._wall_s * 1e3
+        # fraction of summed stage time hidden under other chunks' device
+        # time — 0.0 when serial (wall >= busy), higher when pipelined
+        overlap = (max(0.0, 1.0 - wall_ms / busy_ms) if busy_ms > 0
+                   else 0.0)
         return dict(
             cache_hits=s.hits, cache_misses=s.misses,
             cache_evictions=s.evictions, cache_size=s.size,
@@ -573,6 +847,12 @@ class MWISService:
             programs=len(self._batched_fns), compiles=self.compiles,
             e_blk_hwm=dict(self._eblk_hwm),
             backend=self.cfg.backend, backend_active=self._backend,
+            devices=max(1, self._ndev),
+            pipeline=self.cfg.pipeline,
+            stage_ms=stage_ms,
+            stage_p50_ms=p50,
+            wall_ms=round(wall_ms, 3),
+            overlap_ratio=round(overlap, 4),
             **self.counters,
         )
 

@@ -34,3 +34,23 @@ def make_host_mesh(p: int):
     """Small test mesh over host CPU devices (requires XLA_FLAGS set)."""
     devs = np.asarray(jax.devices()[:p])
     return jax.sharding.Mesh(devs, ("pe",))
+
+
+def make_serve_mesh(num_devices: int | None = None):
+    """Flatten the visible devices into a 1-D ``serve`` mesh — the batch
+    axis of the serving layer (repro.core.serve shards each stacked chunk
+    across it).  ``num_devices`` caps the mesh to the first N devices;
+    ``None`` takes every visible one.  CPU tests get multiple devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before jax
+    import).  Raises when more devices are requested than exist."""
+    devs = jax.devices()
+    if num_devices is not None:
+        if not 1 <= num_devices <= len(devs):
+            raise ValueError(
+                f"make_serve_mesh: requested {num_devices} device(s) but "
+                f"only {len(devs)} visible — launch with more devices or "
+                f"set XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{num_devices} for CPU testing"
+            )
+        devs = devs[:num_devices]
+    return jax.sharding.Mesh(np.asarray(devs), ("serve",))

@@ -23,6 +23,7 @@ ARCHES = ("mwis", "dlrm-mlperf", "gemma3-1b", "qwen3-32b",
 
 
 def _serve_mwis(args) -> None:
+    import jax
     import numpy as np
 
     from repro.core import serve as SV
@@ -30,13 +31,24 @@ def _serve_mwis(args) -> None:
 
     cfg = SV.ServeConfig(algo=args.algo, backend=args.backend,
                          max_batch=args.batch, verify=args.verify,
-                         descent=args.descent)
-    svc = SV.MWISService(cfg)
+                         descent=args.descent, devices=args.devices,
+                         pipeline=not args.no_pipeline)
+    try:
+        svc = SV.MWISService(cfg)
+    except ValueError as e:
+        import sys
+
+        print(f"error: {e}", file=sys.stderr)
+        raise SystemExit(2)
     cells = svc.cells
+    ndev = svc.stats["devices"]
     print(f"mwis service: algo={cfg.algo} backend={cfg.backend} "
           f"verify={cfg.verify} descent={cfg.descent} "
           f"batch<={cfg.max_batch} cells="
           f"{[f'{c.name}(L={c.L},E={c.E})' for c in cells]}")
+    print(f"devices: {ndev}/{jax.device_count()} visible "
+          f"({jax.default_backend()}) "
+          f"pipeline={'on' if cfg.pipeline else 'off'}")
 
     # instance stream: cycle the cells, repeat each topology a few times
     # (fresh weights each request — the production re-auction pattern)
@@ -88,6 +100,14 @@ def _serve_mwis(args) -> None:
           f"oversize_admitted={s['oversize_admitted']} "
           f"plan_cache_hits={s['cache_descent_hits']}/"
           f"{s['cache_descent_hits'] + s['cache_descent_misses']}")
+    p50 = s["stage_p50_ms"]
+    print(f"stages (p50/chunk): pack={p50['pack']:.2f}ms "
+          f"transfer={p50['transfer']:.2f}ms solve={p50['solve']:.2f}ms "
+          f"fetch={p50['fetch']:.2f}ms")
+    print(f"pipeline: devices={s['devices']} chunks={s['chunks']} "
+          f"pipelined={s['pipelined_chunks']} "
+          f"retries={s['pipeline_retries']} "
+          f"overlap_ratio={s['overlap_ratio']:.3f}")
 
 
 def main(argv=None) -> None:
@@ -109,6 +129,13 @@ def main(argv=None) -> None:
     ap.add_argument("--descent", default="off", choices=("off", "auto"),
                     help="shape descent: big cells shrink mid-solve and "
                          "oversize instances enter via descent cells")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="serve-mesh size for the sharded batch axis "
+                         "(default: every visible device; exits with an "
+                         "error when more are requested than exist)")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="disable the overlapped host pack/transfer "
+                         "pipeline (chunks run synchronously)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 

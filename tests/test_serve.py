@@ -3,6 +3,10 @@ CLI validation, and the bench-regression gate (benchmarks/compare.py)."""
 
 import copy
 import json
+import os
+import subprocess
+import sys
+import textwrap
 
 import numpy as np
 import pytest
@@ -352,3 +356,301 @@ def test_compare_missing_rows_warn_not_fail(tmp_path):
     rc, diff = _run_compare(tmp_path, BASE, fresh)
     assert rc == 0
     assert diff["missing"]
+
+
+SERVE_BASE = dict(
+    meta={},
+    results=[dict(cell="serve_xs", backend="jnp", batch=4,
+                  instances_per_sec=50.0)],
+    multidevice=[dict(cell="serve_xs", backend="jnp", batch=4, devices=4,
+                      instances_per_sec=80.0, overlap_ratio=0.2)],
+)
+
+
+def test_compare_serve_slowdown_warns_but_never_gates(tmp_path):
+    from benchmarks import compare as C
+
+    slow = copy.deepcopy(SERVE_BASE)
+    slow["results"][0]["instances_per_sec"] = 10.0    # 5x slower
+    slow["multidevice"][0]["instances_per_sec"] = 10.0
+    sb = tmp_path / "sbase.json"
+    sf = tmp_path / "sfresh.json"
+    sb.write_text(json.dumps(SERVE_BASE))
+    sf.write_text(json.dumps(slow))
+    b = tmp_path / "base.json"
+    f = tmp_path / "fresh.json"
+    out = tmp_path / "diff.json"
+    b.write_text(json.dumps(BASE))
+    f.write_text(json.dumps(BASE))
+    rc = C.main([str(b), str(f), "--out", str(out),
+                 "--serve-baseline", str(sb), "--serve-fresh", str(sf)])
+    assert rc == 0                      # serve section never gates
+    diff = json.loads(out.read_text())
+    assert len(diff["serve"]["warnings"]) == 2
+    assert all(not r["gated"] for r in diff["serve"]["rows"])
+    # committed baselines without a devices column compare as devices=1
+    assert {r["devices"] for r in diff["serve"]["rows"]} == {1, 4}
+
+
+def test_compare_serve_missing_and_new_rows_warn_only(tmp_path):
+    from benchmarks import compare as C
+
+    fresh = dict(meta={}, results=[], multidevice=[
+        dict(cell="serve_s", backend="jnp", batch=16, devices=4,
+             instances_per_sec=5.0, overlap_ratio=0.1)])
+    diff = C.compare_serve(SERVE_BASE, fresh, threshold=1.5)
+    assert diff["warnings"] == []
+    assert len(diff["missing"]) == 2    # both baseline rows absent
+    new = [r for r in diff["rows"] if r["baseline_ips"] is None]
+    assert len(new) == 1 and new[0]["cell"] == "serve_s"
+
+
+# --------------------------------------------------------------------- #
+# multi-device batch sharding + overlapped host pipeline
+# --------------------------------------------------------------------- #
+
+
+def test_batch_size_rounds_to_device_multiple():
+    svc = SV.MWISService(SV.ServeConfig(backend="jnp"))
+    svc._ndev = 4                       # as if 4 devices were visible
+    assert svc._batch_size(1) == 4      # bucket 1 rounds up to a shardable 4
+    assert svc._batch_size(3) == 4
+    assert svc._batch_size(5) == 16     # bucket 16 already a multiple
+    cell = svc.cells[0]._replace(serve_devices=2)
+    assert svc._cell_ndev(cell) == 2    # per-cell cap wins over the mesh
+    assert svc._batch_size(1, cell) == 2
+    svc._ndev = 1
+    assert svc._batch_size(1) == 1      # single device: buckets unchanged
+    assert svc._batch_size(5) == 16
+
+
+def test_batch_size_respects_max_batch_fallthrough():
+    svc = SV.MWISService(SV.ServeConfig(backend="jnp", max_batch=8))
+    svc._ndev = 4
+    # no static bucket fits in (7, 8] -> fall through, still device-aligned
+    assert svc._batch_size(7) == 8
+    assert svc._batch_size(7) % 4 == 0
+
+
+def test_stack_plans_pads_to_batch_multiple():
+    g = gnm(40, 100, seed=5)
+    pg = partition_graph(g, 1, window_cap=8, common_cap=4)
+    row = np.asarray(pg.row[0])
+    plan = E.build_plan(row, pg.V, r_blk=8)
+    stacked = E.stack_plans([plan] * 3, batch_multiple=4)
+    assert stacked.edge_perm.shape[0] == 4    # 3 plans padded to 4
+    # phantom slot repeats the last plan bit-for-bit
+    assert np.array_equal(np.asarray(stacked.edge_perm[3]),
+                          np.asarray(stacked.edge_perm[2]))
+    same = E.stack_plans([plan] * 4, batch_multiple=4)
+    assert same.edge_perm.shape[0] == 4       # already aligned: no padding
+    with pytest.raises(ValueError, match="batch_multiple"):
+        E.stack_plans([plan], batch_multiple=0)
+
+
+def test_service_rejects_excess_devices():
+    with pytest.raises(ValueError, match="exceeds the .* visible"):
+        SV.MWISService(SV.ServeConfig(backend="jnp", devices=4096))
+
+
+def test_serve_cli_rejects_excess_devices(capsys):
+    from repro.launch import serve as L
+
+    with pytest.raises(SystemExit) as e:
+        L.main(["--arch", "mwis", "--devices", "4096"])
+    assert e.value.code == 2
+    assert "visible" in capsys.readouterr().err
+
+
+def test_pipeline_parity_and_stage_stats():
+    # multi-chunk call: pipeline on and off must be bit-identical, and the
+    # per-stage timing telemetry must cover every chunk either way
+    graphs = [gnm(18 + 2 * i, 40 + 3 * i, seed=50 + i) for i in range(6)]
+    on = SV.MWISService(SV.ServeConfig(backend="jnp", max_batch=2,
+                                       pipeline=True))
+    off = SV.MWISService(SV.ServeConfig(backend="jnp", max_batch=2,
+                                        pipeline=False))
+    r_on = on.solve_batch(graphs)
+    r_off = off.solve_batch(graphs)
+    for a, b in zip(r_on, r_off):
+        assert a.ok and b.ok
+        assert a.weight == b.weight
+        assert np.array_equal(a.members, b.members)
+    s_on, s_off = on.stats, off.stats
+    assert s_on["pipelined_chunks"] == s_on["chunks"] == 3
+    assert s_off["pipelined_chunks"] == 0 and s_off["chunks"] == 3
+    for s in (s_on, s_off):
+        assert s["stage_ms"]["pack"] > 0 and s["stage_ms"]["solve"] > 0
+        assert set(s["stage_p50_ms"]) == {"pack", "transfer", "solve",
+                                          "fetch"}
+        assert s["wall_ms"] > 0 and 0.0 <= s["overlap_ratio"] < 1.0
+
+
+def test_pipeline_single_chunk_takes_sync_path():
+    # one chunk has nothing to overlap with -> the sync path runs (this
+    # also keeps the _execute_chunk monkeypatch seam on solve_one)
+    svc = SV.MWISService(SV.ServeConfig(backend="jnp"))
+    r = svc.solve_one(gnm(20, 40, seed=60))
+    assert r.ok
+    assert svc.stats["pipelined_chunks"] == 0 and svc.stats["chunks"] == 1
+
+
+def test_pipeline_poisoned_batchmates_are_isolated():
+    from repro.core import validate as VAL
+    from repro.core.graph import Graph
+
+    good = [gnm(20, 40, seed=70 + s) for s in range(5)]
+    nan_g = Graph(indptr=np.array([0, 1, 2]),
+                  indices=np.array([1, 0], np.int32),
+                  weights=np.array([np.nan, 1.0]))
+    svc = SV.MWISService(SV.ServeConfig(backend="jnp", max_batch=2,
+                                        pipeline=True))
+    res = svc.solve_batch([good[0], good[1], nan_g, good[2], good[3],
+                           good[4]])
+    assert not res[2].ok and res[2].reason == VAL.REASON_BAD_WEIGHT
+    ref = SV.MWISService(SV.ServeConfig(backend="jnp")).solve_batch(good)
+    for got, want in zip([res[0], res[1], res[3], res[4], res[5]], ref):
+        assert got.ok and np.array_equal(got.members, want.members)
+
+
+def test_pipeline_dispatch_failure_falls_back_to_sync_path(monkeypatch):
+    # a launch that raises mid-pipeline must not lose the chunk: it is
+    # retired through the synchronous fallback-chain path
+    graphs = [gnm(18 + 2 * i, 40, seed=80 + i) for i in range(4)]
+    svc = SV.MWISService(SV.ServeConfig(backend="jnp", max_batch=2,
+                                        pipeline=True))
+    ref = SV.MWISService(
+        SV.ServeConfig(backend="jnp", max_batch=2, pipeline=False)
+    ).solve_batch(graphs)
+    boom = {"n": 0}
+    real = SV.MWISService._launch_chunk
+
+    def flaky(self, staged):
+        boom["n"] += 1
+        if boom["n"] == 1:
+            raise RuntimeError("injected launch failure")
+        return real(self, staged)
+
+    monkeypatch.setattr(SV.MWISService, "_launch_chunk", flaky)
+    res = svc.solve_batch(graphs)
+    for got, want in zip(res, ref):
+        assert got.ok and np.array_equal(got.members, want.members)
+    assert svc.stats["pipeline_retries"] == 1
+
+
+def test_descent_auto_takes_staged_single_device_path():
+    # descent-routed instances bypass the sharded/pipelined chunk machinery
+    # entirely (per-instance staged path) and still solve correctly
+    cells = SV.serve_cells()
+    big = cells[-1]
+    n = big.L // 2 + 8
+    g = gnm(n, 2 * n, seed=90)
+    svc = SV.MWISService(SV.ServeConfig(
+        backend="jnp", descent="auto", descent_min_L=big.L))
+    r = svc.solve_batch([g])[0]
+    assert r.ok
+    assert svc.stats["descent_solves"] == 1
+    assert svc.stats["chunks"] == 0     # no batched chunk ran
+    src = g.edge_sources()
+    assert not np.any(r.members[src] & r.members[g.indices])
+
+
+# --------------------------------------------------------------------- #
+# sharded execution under 4 forced host devices (subprocess lane)
+# --------------------------------------------------------------------- #
+
+SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax
+    assert jax.device_count() == 4, jax.device_count()
+    import numpy as np
+    from repro.core import serve as SV
+    from repro.core.graph import Graph
+    from repro.graphs.generators import gnm
+
+    def ref_svc():
+        # single-device, non-pipelined reference on the same process
+        return SV.MWISService(SV.ServeConfig(
+            backend="jnp", max_batch=8, devices=1, pipeline=False))
+
+    def assert_same(a, b, tag):
+        assert a.ok == b.ok, tag
+        assert a.weight == b.weight, tag
+        assert np.array_equal(a.members, b.members), tag
+
+    # ragged mixed-cell batch: 10 instances over two cells, not a
+    # multiple of the device count; includes the batch-of-1 spill chunk
+    gs = [gnm(20 + 3 * i, 40 + 5 * i, seed=i) for i in range(8)]
+    gs += [gnm(120, 300, seed=8), gnm(130, 320, seed=9)]
+    want = ref_svc().solve_batch(gs)
+    svc = SV.MWISService(SV.ServeConfig(backend="jnp", max_batch=8,
+                                        devices=4))
+    got = svc.solve_batch(gs)
+    for a, b in zip(got, want):
+        assert_same(a, b, "ragged-mixed")
+    s = svc.stats
+    assert s["devices"] == 4, s
+    assert s["chunks"] > 0 and s["solve_errors"] == 0, s
+
+    # batch of 1 on 4 devices: pads to one instance per device,
+    # phantom results discarded
+    one = SV.MWISService(SV.ServeConfig(backend="jnp", devices=4))
+    assert_same(one.solve_one(gs[0]), want[0], "batch-of-1")
+
+    # poisoned batchmate: the bad request errors, every healthy
+    # batchmate stays bit-identical to the single-device reference
+    nan_g = Graph(indptr=np.array([0, 1, 2]),
+                  indices=np.array([1, 0], np.int32),
+                  weights=np.array([np.nan, 1.0]))
+    px = SV.MWISService(SV.ServeConfig(backend="jnp", max_batch=8,
+                                       devices=4))
+    pres = px.solve_batch([gs[0], nan_g, gs[1], gs[2]])
+    assert not pres[1].ok and pres[1].reason == "bad_weight"
+    for got_r, want_r in zip([pres[0], pres[2], pres[3]], want[:3]):
+        assert_same(got_r, want_r, "poisoned")
+
+    # blocked backend (stacked plans shard too)
+    want_b = SV.MWISService(SV.ServeConfig(
+        backend="blocked", max_batch=4, devices=1,
+        pipeline=False)).solve_batch(gs[:4])
+    got_b = SV.MWISService(SV.ServeConfig(
+        backend="blocked", max_batch=4, devices=4)).solve_batch(gs[:4])
+    for a, b in zip(got_b, want_b):
+        assert_same(a, b, "blocked")
+
+    # descent="auto" on a 4-device service: staged instances fall back
+    # to the single-device per-instance path and match the reference
+    cells = SV.serve_cells()
+    big = cells[-1]
+    dg = gnm(big.L // 2 + 8, big.L + 16, seed=33)
+    d_want = SV.MWISService(SV.ServeConfig(
+        backend="jnp", descent="auto", descent_min_L=big.L,
+        devices=1, pipeline=False)).solve_batch([dg])[0]
+    d_svc = SV.MWISService(SV.ServeConfig(
+        backend="jnp", descent="auto", descent_min_L=big.L, devices=4))
+    d_got = d_svc.solve_batch([dg])[0]
+    assert_same(d_got, d_want, "descent-auto")
+    assert d_svc.stats["descent_solves"] == 1
+
+    print("SHARDED PARITY OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_serving_bit_identical_to_single_device():
+    """The tentpole invariant: batch-axis sharding over a 4-device serve
+    mesh (+ the host pipeline) is bit-identical per instance to the
+    single-device path — across ragged/mixed/poisoned batches, both
+    backends, and the descent fallback."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(__file__), "..", "src"
+    )
+    env.pop("XLA_FLAGS", None)          # the script forces its own
+    r = subprocess.run(
+        [sys.executable, "-c", SHARDED_SCRIPT], capture_output=True,
+        text=True, env=env, timeout=1800,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "SHARDED PARITY OK" in r.stdout
